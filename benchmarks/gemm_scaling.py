@@ -1,0 +1,56 @@
+"""Paper Figs. 6/7: GEMM throughput vs matrix size N at fixed optimal
+parameters (N = 1024 .. 20480, ΔN = 1024 — the paper's scaling protocol),
+tuned-vs-untuned, on the TPU target (cost model) + host-measured small N."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TPU_V5E, TileConfig, sweep_gemm
+from repro.core.cost_model import gemm_cost
+
+UNTUNED = TileConfig(128, 128, 128)   # registry default = "20% of peak" case
+
+
+def scaling_tpu(dtype=jnp.bfloat16) -> List[tuple]:
+    rows = []
+    # tune once at the paper's N=10240, then scale N with fixed params
+    tuned = sweep_gemm(10240, 10240, 10240, dtype=dtype, mode="model",
+                       hardware=TPU_V5E, record=False).best.config
+    for n in range(1024, 20481, 1024):
+        c_t = gemm_cost(n, n, n, tuned, TPU_V5E, dtype)
+        c_u = gemm_cost(n, n, n, UNTUNED, TPU_V5E, dtype)
+        rows.append((f"gemm_scaling/tpu-v5e/tuned/N{n}",
+                     c_t.total_s * 1e6, c_t.tflops))
+        rows.append((f"gemm_scaling/tpu-v5e/untuned/N{n}",
+                     c_u.total_s * 1e6, c_u.tflops))
+    return rows
+
+
+def scaling_host_measured() -> List[tuple]:
+    """Wall-clock XLA GEMM on this host, N small (real execution)."""
+    rows = []
+    for n in (256, 512, 1024):
+        a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+        f = jax.jit(lambda x, y: x @ y)
+        f(a, b).block_until_ready()
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            f(a, b).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        rows.append((f"gemm_scaling/host-xla/N{n}", best * 1e6,
+                     2 * n ** 3 / best / 1e9))
+    return rows
+
+
+def run() -> List[tuple]:
+    rows = scaling_tpu()
+    # thin the TPU rows for console readability: every 4th N + ends
+    keep = [r for i, r in enumerate(rows)
+            if (i // 2) % 4 == 0 or i >= len(rows) - 2]
+    return keep + scaling_host_measured()

@@ -1,0 +1,84 @@
+"""Paper Figs. 3/4 + Tab. 4: tile-size tuning sweeps per backend.
+
+Reproduces the paper's tuning methodology:
+  * fixed problem size (paper: N=10240, control N=7168),
+  * sweep tile size (paper: powers of two; here the VMEM-feasible
+    (bm, bk, bn) space, plus the paper-faithful square-T subsweep),
+  * keep the best-of-repeats timing per candidate (paper §2.3),
+  * report the optimum per (backend, dtype) — the Tab. 4 analogue.
+
+Backends: tpu-v5e (analytic cost model — the TARGET hardware, this container
+is CPU-only), host measured XLA, host measured pallas-interpret (small N).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (HOST_CPU, INTERPRET_SPACE, TPU_V5E, TuningSpace,
+                        sweep_gemm)
+from repro.core.tile_config import square
+from repro.core.cost_model import gemm_cost
+
+N_PAPER = 10240        # paper's tuning size
+N_CONTROL = 7168       # paper's control size
+
+
+def tune_tpu_model(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[str]:
+    """Figs. 3/4 analogue on the target hardware via the cost model."""
+    rows = []
+    res = sweep_gemm(n, n, n, dtype=dtype, mode="model", hardware=TPU_V5E)
+    for p in sorted(res.points, key=lambda p: p.seconds):
+        rows.append((f"gemm_tune/tpu-v5e/{jnp.dtype(dtype).name}/N{n}/"
+                     f"{p.config.label}", p.seconds * 1e6, p.gflops))
+    return rows
+
+
+def tune_square_paper_faithful(n: int = N_PAPER, dtype=jnp.bfloat16):
+    """The paper's exact 1-parameter sweep: square tiles T (Fig. 3)."""
+    rows = []
+    for t in (128, 256, 512):
+        cfg = square(t)
+        if not cfg.fits(TPU_V5E, dtype):
+            continue
+        c = gemm_cost(n, n, n, cfg, TPU_V5E, dtype)
+        rows.append((f"gemm_tune_square/tpu-v5e/T{t}/N{n}",
+                     c.total_s * 1e6, c.tflops * 1000))
+    return rows
+
+
+def tune_host_measured(n: int = 256, dtype=jnp.float32):
+    """Measured wall-clock sweep on this host (pallas-interpret, small N)."""
+    res = sweep_gemm(n, n, n, dtype=dtype, mode="measure",
+                     space=INTERPRET_SPACE, hardware=HOST_CPU,
+                     backend="pallas-interpret", repeats=2, record=False)
+    rows = []
+    for p in sorted(res.points, key=lambda p: p.seconds)[:5]:
+        rows.append((f"gemm_tune/host-interpret/N{n}/{p.config.label}",
+                     p.seconds * 1e6, p.gflops))
+    return rows
+
+
+def tab4_optima():
+    """Tab. 4 analogue: per-(hardware, dtype, N) optimum tile."""
+    rows = []
+    for dtype in (jnp.bfloat16, jnp.float32):
+        for n in (N_PAPER, N_CONTROL):
+            res = sweep_gemm(n, n, n, dtype=dtype, mode="model",
+                             hardware=TPU_V5E)
+            b = res.best
+            rows.append((f"tab4/tpu-v5e/{jnp.dtype(dtype).name}/N{n}/"
+                         f"best={b.config.label}", b.seconds * 1e6, b.gflops))
+    return rows
+
+
+def run() -> List[tuple]:
+    rows = []
+    rows += tune_tpu_model()[:6]
+    rows += tune_square_paper_faithful()
+    rows += tune_host_measured()
+    rows += tab4_optima()
+    return rows

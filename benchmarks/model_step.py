@@ -1,0 +1,65 @@
+"""Measured wall-clock micro-benchmarks of the framework's hot paths on this
+host (reduced configs — real executions, not estimates): train step, prefill,
+decode per architecture family."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.catalog import ARCHITECTURES
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.train import init_train_state, make_train_step
+
+FAMILIES = ["llama3.2-1b", "olmoe-1b-7b", "mamba2-130m", "zamba2-2.7b",
+            "whisper-large-v3", "llama-3.2-vision-11b"]
+
+
+def _time(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> List[tuple]:
+    rows = []
+    for arch in FAMILIES:
+        cfg = ARCHITECTURES[arch].reduced()
+        model = build_model(cfg)
+        opt = AdamW(learning_rate=1e-3)
+        state = init_train_state(model, opt, jax.random.PRNGKey(0))
+        pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=32, global_batch=4))
+        batch = pipe(0)
+        for k, sds in model.extra_inputs(4).items():
+            batch[k] = jnp.zeros(sds.shape, sds.dtype)
+        step = jax.jit(make_train_step(model, opt))
+        t = _time(step, state, batch)
+        toks = 4 * 32
+        rows.append((f"train_step/{arch}/reduced", t * 1e6, toks / t))
+
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(2, 64)
+        pre_batch = {"tokens": batch["tokens"][:2]}
+        for k, sds in model.extra_inputs(2).items():
+            pre_batch[k] = jnp.zeros(sds.shape, sds.dtype)
+        pf = jax.jit(model.prefill)
+        t = _time(pf, params, pre_batch, cache)
+        rows.append((f"prefill/{arch}/reduced", t * 1e6, 2 * 32 / t))
+
+        _, cache2 = pf(params, pre_batch, cache)
+        dec = jax.jit(model.decode_step)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        t = _time(dec, params, tok, cache2, jnp.int32(32))
+        rows.append((f"decode_step/{arch}/reduced", t * 1e6, 2 / t))
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Eqs. 5-7 validation: the compute-to-memory-ratio model
+R(N, T) = 2NT/(2N+T) against the cost model's measured arithmetic intensity,
+and K(S,T) = 2T^2 S against TileConfig.vmem_working_set."""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import TPU_V5E
+from repro.core.cost_model import gemm_cost, ratio_model
+from repro.core.tile_config import square
+
+
+def run() -> List[tuple]:
+    rows = []
+    for n in (4096, 10240):
+        for t in (128, 256, 512):
+            cfg = square(t)
+            if not cfg.fits(TPU_V5E, jnp.float32):
+                continue
+            c = gemm_cost(n, n, n, cfg, TPU_V5E, jnp.float32)
+            r_pred = ratio_model(n, t)            # flops per element
+            r_meas = c.arithmetic_intensity * 4   # bytes -> elements (f32)
+            rows.append((f"ratio_model/N{n}/T{t}/pred", 0.0, r_pred))
+            rows.append((f"ratio_model/N{n}/T{t}/measured", 0.0, r_meas))
+            # Eq. 5: K(S,T) = 2 T^2 S  (A+B tiles, f32)
+            k_pred = 2 * t * t * 4
+            ab = (cfg.bm * cfg.bk + cfg.bk * cfg.bn) * 4
+            rows.append((f"eq5_cache/T{t}/bytes", 0.0, float(ab == k_pred)))
+    return rows

@@ -1,0 +1,23 @@
+"""Roofline summary rows from the dry-run records (skips cleanly when
+results/dryrun.json has not been generated yet).  derived = MFU proxy."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun.json")
+
+
+def run() -> List[tuple]:
+    if not os.path.exists(RESULTS):
+        return [("roofline_summary/missing-results", 0.0, 0.0)]
+    from repro.launch.roofline import load_rows
+    rows_out = []
+    for mesh in ("single", "multi"):
+        rows, skips = load_rows(RESULTS, mesh)
+        for r in rows:
+            rows_out.append((
+                f"roofline/{r['arch']}/{r['shape']}/{mesh}/"
+                f"dom={r['dominant']}",
+                r["est_step_s"] * 1e6, r["mfu_proxy"]))
+    return rows_out

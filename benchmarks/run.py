@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table/figure + framework hot paths.
+
+Prints ``name,us_per_call,derived`` CSV (derived = GFLOPs/s, fraction of
+peak, tokens/s, or model-ratio depending on the bench).
+
+  PYTHONPATH=src python -m benchmarks.run                # all
+  PYTHONPATH=src python -m benchmarks.run gemm_tuning    # one suite
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = ["gemm_tuning", "gemm_scaling", "relative_peak", "ratio_model",
+          "model_step", "roofline_summary"]
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or SUITES
+    print("name,us_per_call,derived")
+    for suite in wanted:
+        try:
+            mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived:.4g}", flush=True)
+        except Exception as e:  # keep the harness running across suites
+            traceback.print_exc()
+            print(f"{suite}/ERROR,0,0  # {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

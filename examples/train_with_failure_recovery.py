@@ -1,0 +1,50 @@
+"""Fault-tolerance demo: train, 'crash', restart from checkpoint, verify the
+resumed run is bitwise identical to an uninterrupted one.
+
+Run: PYTHONPATH=src python examples/train_with_failure_recovery.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.catalog import get_config
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.train import init_train_state, make_train_step, abstract_train_state
+
+cfg = get_config("llama3.2-1b").reduced()
+model = build_model(cfg)
+opt = AdamW(learning_rate=1e-3)
+pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=8))
+step = jax.jit(make_train_step(model, opt))
+
+with tempfile.TemporaryDirectory() as d:
+    ck = Checkpointer(d)
+
+    # reference run: 20 uninterrupted steps
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    for i in range(20):
+        state, _ = step(state, pipe(i))
+        if i + 1 == 10:
+            ck.save(10, state)
+    ref = state
+
+    # 'crash' after step 10 -> restart from checkpoint -> replay 10..20
+    print(f"[recovery] latest checkpoint: step {ck.latest_step()}")
+    template = abstract_train_state(model, opt)
+    state = ck.restore(10, template)
+    for i in range(10, 20):
+        state, m = step(state, pipe(i))
+
+    diffs = [float(np.abs(np.asarray(a, np.float32)
+                          - np.asarray(b, np.float32)).max())
+             for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                             jax.tree_util.tree_leaves(state.params))]
+    print(f"[recovery] max param diff after resumed run: {max(diffs):.2e}")
+    assert max(diffs) == 0.0, "resume must be bitwise identical"
+    print("[recovery] OK — restart is bitwise identical "
+          "(deterministic data + atomic checkpoints)")

@@ -1,0 +1,59 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from results/dryrun.json."""
+import json, sys
+sys.path.insert(0, "src")
+from repro.launch.roofline import load_rows, markdown_table, roofline_row, fmt_s
+
+results = json.load(open("results/dryrun.json"))
+
+def dryrun_summary():
+    rows = ["| arch | shape | mesh | status | state bytes/dev | compile s | collectives (count/dev/step) |",
+            "|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        if "#" in key:
+            continue
+        r = results[key]
+        if r["status"] == "OK":
+            ab = r["memory"].get("argument_bytes")
+            ab = f"{ab/1e6:.0f} MB" if ab else "n/a"
+            cc = int(r["hlo_stats"]["collective_count"])
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | {ab} | "
+                        f"{r['seconds_compile']} | {cc} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | — | — | — |")
+    return "\n".join(rows)
+
+def perf_table(cell, order):
+    rows = [f"**{cell}**", "",
+            "| iteration | compute | memory | collective | dominant | est. step | MFU-proxy | step speedup |",
+            "|---|---|---|---|---|---|---|---|"]
+    base = None
+    for tag in order:
+        key = cell if tag == "baseline" else f"{cell}#{tag}"
+        if key not in results or results[key].get("status") != "OK":
+            rows.append(f"| {tag} | (failed/skipped) | | | | | | |")
+            continue
+        r = roofline_row(results[key])
+        if base is None:
+            base = r
+        sp = base["est_step_s"] / r["est_step_s"]
+        rows.append(f"| {tag} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+                    f"{fmt_s(r['collective_s'])} | {r['dominant']} | {fmt_s(r['est_step_s'])} | "
+                    f"{r['mfu_proxy']*100:.1f}% | x{sp:.2f} |")
+    return "\n".join(rows)
+
+single_rows, single_skips = load_rows("results/dryrun.json", "single")
+multi_rows, multi_skips = load_rows("results/dryrun.json", "multi")
+
+out = {
+    "dryrun_summary": dryrun_summary(),
+    "roofline_single": markdown_table(single_rows, single_skips),
+    "roofline_multi": markdown_table(multi_rows, multi_skips),
+    "perf_moonshot": perf_table("moonshot-v1-16b-a3b/train_4k/single",
+        ["baseline", "ep-pin", "ep-pin+lc512", "ep-pin+bf16c", "ep-pin+vjp16", "ep-pin+rdots"]),
+    "perf_stablelm": perf_table("stablelm-12b/train_4k/single",
+        ["baseline", "pbf16", "pbf16+sp", "pbf16+vjp16", "pbf16+rdots"]),
+    "perf_whisper": perf_table("whisper-large-v3/train_4k/single",
+        ["baseline", "pbf16", "pbf16+sp", "pbf16+vjp16", "pbf16+rdots"]),
+}
+json.dump(out, open("/tmp/exp_tables.json", "w"))
+print("tables written")

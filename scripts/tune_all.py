@@ -1,0 +1,32 @@
+"""Generate the production tuned-tile table (paper Tab. 4 analogue) for every
+GEMM shape the full-size models actually issue, via abstract tracing +
+cost-model sweeps.  Output: results/tuned_tiles.json (loadable by
+TileRegistry at launch)."""
+import sys
+sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+
+from repro.configs.catalog import ARCHITECTURES
+from repro.core import TileRegistry, capture_gemm_shapes, tune_model_gemms
+from repro.models import build_model
+
+registry = TileRegistry()
+all_shapes = set()
+for name, cfg in ARCHITECTURES.items():
+    model = build_model(cfg)
+    b, s = 4, 4096  # per-device-scale slice of train_4k
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    for k, sds in model.extra_inputs(b).items():
+        batch[k] = sds
+    with capture_gemm_shapes() as shapes:
+        jax.eval_shape(lambda p, bt: model.forward(p, bt), model.abstract(), batch)
+    uniq = sorted(set(shapes))
+    all_shapes.update(uniq)
+    print(f"{name:26s} {len(shapes):3d} GEMMs, {len(uniq):2d} unique shapes")
+
+print(f"tuning {len(all_shapes)} unique shapes (cost model, tpu-v5e, bf16)...")
+tuned = tune_model_gemms(sorted(all_shapes), dtype=jnp.bfloat16,
+                         registry=registry)
+registry.save("results/tuned_tiles.json")
+print(f"wrote results/tuned_tiles.json with {len(registry.entries())} entries")

@@ -1,0 +1,119 @@
+"""Sharded checkpointing with elastic restore.
+
+Format: one directory per step containing
+  * ``manifest.json`` — pytree structure, per-leaf shape/dtype, step, and a
+    content checksum per leaf (corruption detection on restore);
+  * one ``.npy`` per leaf (host-local full value on this single-host
+    container; on a real multi-host cluster each host writes its local
+    shards via the same interface — the manifest records the global shape
+    either way).
+
+Elastic restore: ``restore(..., shardings=...)`` re-shards every leaf to the
+target mesh at load time (``jax.device_put`` with the new NamedSharding), so
+a job restarted on a different mesh shape (e.g. after losing a pod) resumes
+from the same global state — the elastic-scaling path required at 1000+
+nodes.  An atomic rename makes partially-written checkpoints invisible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "__".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any) -> str:
+        flat, _ = _flatten_with_paths(state)
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}}
+        for name, leaf in flat:
+            arr = np.asarray(jax.device_get(leaf))
+            logical_dtype = str(arr.dtype)
+            # numpy can't serialize ml_dtypes (bf16 etc.): store a uint view
+            if arr.dtype.kind == "V" or logical_dtype not in np.sctypeDict:
+                arr = arr.view({1: np.uint8, 2: np.uint16,
+                                4: np.uint32}[arr.dtype.itemsize])
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            manifest["leaves"][name] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "logical_dtype": logical_dtype,
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)      # atomic publish
+        self._gc()
+        return final
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.directory)
+                 if d.startswith("step_") and not d.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, target: Any, shardings: Any = None) -> Any:
+        """``target`` supplies the pytree structure (abstract or concrete).
+        ``shardings``: optional matching pytree of NamedSharding for elastic
+        re-sharding onto the current mesh."""
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = _flatten_with_paths(target)
+        shard_flat = None
+        if shardings is not None:
+            shard_flat = [s for _, s in _flatten_with_paths(shardings)[0]]
+        leaves = []
+        for i, (name, leaf) in enumerate(flat):
+            arr = np.load(os.path.join(path, name + ".npy"))
+            meta = manifest["leaves"][name]
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != meta["crc32"]:
+                raise IOError(f"checkpoint corruption in leaf {name!r}")
+            logical = meta.get("logical_dtype", str(arr.dtype))
+            if logical != str(arr.dtype):  # stored as uint view of bf16 etc.
+                arr = arr.view(jnp.dtype(logical))
+            want_dtype = getattr(leaf, "dtype", arr.dtype)
+            out = jnp.asarray(arr, dtype=want_dtype)
+            if shard_flat is not None:
+                out = jax.device_put(out, shard_flat[i])
+            leaves.append(out)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # ------------------------------------------------------------------
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+    ModelConfig, ShapeSpec, applicable_shapes,
+)

@@ -1,0 +1,25 @@
+"""Architecture catalog: --arch <id> resolves here."""
+from repro.configs.base import ModelConfig
+
+from repro.configs.llama_3_2_vision_11b import CONFIG as _vlm
+from repro.configs.olmoe_1b_7b import CONFIG as _olmoe
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.llama3_2_1b import CONFIG as _llama1b
+from repro.configs.chatglm3_6b import CONFIG as _chatglm
+from repro.configs.stablelm_12b import CONFIG as _stablelm
+from repro.configs.yi_9b import CONFIG as _yi
+from repro.configs.mamba2_130m import CONFIG as _mamba
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.zamba2_2_7b import CONFIG as _zamba
+
+ARCHITECTURES = {c.name: c for c in (
+    _vlm, _olmoe, _moonshot, _llama1b, _chatglm, _stablelm, _yi,
+    _mamba, _whisper, _zamba,
+)}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHITECTURES[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHITECTURES)}")

@@ -1,0 +1,13 @@
+"""whisper-large-v3 [audio] — enc-dec, 32 encoder + 32 decoder layers, MHA.
+Conv/mel frontend is a STUB (input_specs supplies (B, 1500, 1280) frame
+embeddings).  Learned decoder positions extended to cover assigned shapes.
+[arXiv:2212.04356]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="audio",
+    num_layers=32, encoder_layers=32, encoder_len=1500,
+    d_model=1280, num_heads=20, num_kv_heads=20,
+    d_ff=5120, vocab_size=51866, norm="layernorm",
+    use_rope=False, learned_positions=32768,
+)

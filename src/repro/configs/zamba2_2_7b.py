@@ -1,0 +1,12 @@
+"""zamba2-2.7b [hybrid] — 54 Mamba2 layers with ONE shared-weight attention
+block applied every 6 layers (9 applications, distinct KV each).
+[arXiv:2411.15242]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=10240, vocab_size=32000, rope_theta=10000.0,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_chunk=128,
+    attn_period=6,
+)

@@ -1,0 +1,8 @@
+"""Core: the paper's contribution — single-source tunable GEMM machinery."""
+from repro.core.gemm_api import (  # noqa: F401
+    ExecutionContext, capture_gemm_shapes, einsum, execution_context, matmul,
+)
+from repro.core.hardware import HARDWARE, HOST_CPU, TPU_V5E, get_hardware  # noqa: F401
+from repro.core.registry import GLOBAL_REGISTRY, TileRegistry, get_tile_config  # noqa: F401
+from repro.core.tile_config import INTERPRET_SPACE, TileConfig, TuningSpace, square  # noqa: F401
+from repro.core.tuner import SweepResult, sweep_gemm, tune_model_gemms  # noqa: F401

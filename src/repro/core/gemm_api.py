@@ -1,0 +1,159 @@
+"""The single public matmul entry point — every model matmul goes here.
+
+This is the framework's enforcement of the paper's thesis: the algorithm
+(kernels/gemm.py) is written once; *which execution backend runs it* and
+*with which tile parameters* is decided here from ambient context + the
+registry.  Model code never mentions tiles or backends.
+
+``ExecutionContext`` plays the role of the paper's build matrix (Tab. 3):
+backend x hardware x dtype.  On a real TPU the default context resolves to
+the Pallas kernel; on this CPU container it resolves to XLA (for jit/pjit
+paths) with pallas-interpret available for kernel validation.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import GLOBAL_REGISTRY
+from repro.kernels import ops
+
+
+def _default_backend() -> str:
+    platform = jax.default_backend()
+    return ops.BACKEND_PALLAS_TPU if platform == "tpu" else ops.BACKEND_XLA
+
+
+@dataclasses.dataclass
+class ExecutionContext:
+    backend: Optional[str] = None       # None -> auto by platform
+    hardware: str = "tpu-v5e"           # registry/tuner key (target hardware)
+    capture: Optional[List[Tuple[int, int, int]]] = None  # GEMM shape trace
+    # When True, 16-bit matmuls emit 16-bit outputs at the tile level, so
+    # cross-shard partial-sum all-reduces run in bf16 instead of f32 (halves
+    # the dominant TP collective; MXU still accumulates f32 within a shard).
+    bf16_partials: bool = False
+
+    def resolve_backend(self) -> str:
+        return self.backend or _default_backend()
+
+
+_TLS = threading.local()
+
+
+def _ctx() -> ExecutionContext:
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        ctx = ExecutionContext()
+        _TLS.ctx = ctx
+    return ctx
+
+
+@contextlib.contextmanager
+def execution_context(**overrides):
+    """Scoped override, e.g. ``with execution_context(backend="pallas-interpret")``."""
+    old = _ctx()
+    new = dataclasses.replace(old, **overrides)
+    _TLS.ctx = new
+    try:
+        yield new
+    finally:
+        _TLS.ctx = old
+
+
+@contextlib.contextmanager
+def capture_gemm_shapes():
+    """Collect every (m, k, n) issued under this scope — feeds the tuner."""
+    shapes: List[Tuple[int, int, int]] = []
+    with execution_context(capture=shapes):
+        yield shapes
+
+
+# --- bf16-reduction matmul (beyond-paper §Perf option) ---------------------
+# Standard AD leaves cotangents in f32 wherever the fwd graph upcast
+# (norms, softmax, loss), so the backward TP/FSDP partial-sum all-reduces
+# run in f32.  This custom-VJP dot pins BOTH directions to bf16 outputs, so
+# every cross-shard reduction of activations/grad-activations/grad-weights
+# moves half the bytes.  MXU accumulation within a shard remains f32-backed;
+# the cross-shard sum is bf16 (the usual production mixed-precision choice).
+
+@jax.custom_vjp
+def _dot_bf16_reduce(x2, w):
+    return jax.lax.dot(x2, w, preferred_element_type=jnp.bfloat16)
+
+
+def _dot_bf16_reduce_fwd(x2, w):
+    return _dot_bf16_reduce(x2, w), (x2, w)
+
+
+def _dot_bf16_reduce_bwd(res, g):
+    x2, w = res
+    gb = g.astype(jnp.bfloat16)
+    dx = jax.lax.dot(gb, w.T, preferred_element_type=jnp.bfloat16)
+    dw = jax.lax.dot(x2.T, gb, preferred_element_type=jnp.bfloat16)
+    return dx.astype(x2.dtype), dw.astype(w.dtype)
+
+
+_dot_bf16_reduce.defvjp(_dot_bf16_reduce_fwd, _dot_bf16_reduce_bwd)
+
+
+def matmul(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
+           activation: Optional[str] = None, out_dtype=None) -> jax.Array:
+    """``x @ w`` for x of shape (..., K) and w of shape (K, N).
+
+    The only matmul primitive the model zoo uses.  Fused epilogues (bias,
+    activation) ride on the kernel's epilogue so the single source covers
+    the model's hot paths, not just plain GEMM.
+    """
+    ctx = _ctx()
+    backend = ctx.resolve_backend()
+    k = x.shape[-1]
+    if w.shape[0] != k:
+        raise ValueError(f"matmul mismatch: {x.shape} @ {w.shape}")
+    n = w.shape[1]
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+
+    if ctx.capture is not None:
+        ctx.capture.append((m, k, n))
+
+    config = None
+    if backend in (ops.BACKEND_PALLAS_TPU, ops.BACKEND_PALLAS_INTERPRET):
+        config = GLOBAL_REGISTRY.get(ctx.hardware, x.dtype, m, k, n)
+
+    if (ctx.bf16_partials and backend == ops.BACKEND_XLA
+            and bias is None and activation is None
+            and x.dtype == jnp.bfloat16 and w.dtype == jnp.bfloat16):
+        out = _dot_bf16_reduce(x2, w)
+        if out_dtype is not None:
+            out = out.astype(out_dtype)
+        return out.reshape(*lead, n)
+
+    out = ops.gemm(x2, w, config=config, backend=backend, bias=bias,
+                   activation=activation, out_dtype=out_dtype,
+                   bf16_partials=ctx.bf16_partials)
+    return out.reshape(*lead, n)
+
+
+def einsum(subscripts: str, *operands, **kw):
+    """Thin escape hatch for contractions that are not plain (…,K)x(K,N).
+
+    Routed through XLA dot_general; still subject to the ambient context's
+    dtype policy.  Kept in one place so a future Pallas generalization can
+    swap in without touching models.
+    """
+    pref = jnp.float32
+    if _ctx().bf16_partials and all(
+            jnp.dtype(getattr(o, "dtype", jnp.float32)).itemsize <= 2
+            for o in operands):
+        pref = jnp.bfloat16
+    return jnp.einsum(subscripts, *operands,
+                      preferred_element_type=pref, **kw)

@@ -1,0 +1,59 @@
+"""Hardware descriptions (the paper's Tables 1/2 analogue).
+
+One record per target "architecture".  The roofline analysis, the analytic
+tile cost model, and the tuner all read from these — never from constants
+scattered in code.  TPU v5e is the primary target per the task spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    # peak FLOP/s per chip, keyed by dtype name (paper Tab. 1/2 "theoretical peak")
+    peak_flops: Dict[str, float]
+    hbm_bandwidth: float          # bytes/s per chip
+    vmem_bytes: int               # software-managed on-chip memory (the "cache")
+    ici_link_bandwidth: float     # bytes/s per link (inter-chip)
+    mxu_dim: int = 128            # systolic array native dim
+    sublane: int = 8              # native second-minor tiling for f32
+
+    def peak_for(self, dtype) -> float:
+        return self.peak_flops[jnp.dtype(dtype).name]
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops={
+        "bfloat16": 197e12,   # task-spec constant: 197 TFLOP/s bf16
+        "float32": 98.5e12,   # MXU f32 ~ half bf16 throughput
+    },
+    hbm_bandwidth=819e9,      # 819 GB/s
+    vmem_bytes=128 * 1024 * 1024 // 8,  # ~16 MiB usable VMEM per core
+    ici_link_bandwidth=50e9,  # ~50 GB/s per ICI link
+)
+
+# CPU record used when *measuring* on this container (interpret-mode sweeps).
+HOST_CPU = HardwareSpec(
+    name="host-cpu",
+    peak_flops={"bfloat16": 1e11, "float32": 2e11},
+    hbm_bandwidth=50e9,
+    vmem_bytes=32 * 1024 * 1024,   # L2+L3-ish proxy
+    ici_link_bandwidth=10e9,
+    mxu_dim=16,                    # SIMD width proxy — relaxes alignment
+    sublane=1,
+)
+
+HARDWARE: Dict[str, HardwareSpec] = {h.name: h for h in (TPU_V5E, HOST_CPU)}
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    try:
+        return HARDWARE[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware {name!r}; known: {sorted(HARDWARE)}")

@@ -1,0 +1,107 @@
+"""Per-architecture optimal-parameter registry — Alpaka Listing 1.1 in JAX.
+
+The paper stores the tuned tile size in a trait specialized per accelerator::
+
+    template<...> struct OptimalVectorSize<AccGpuCudaRt<...>> { ... GPU_ELEM_NUM ... };
+    template<...> struct OptimalVectorSize<AccCpuOmp2Blocks<...>> { ... OMP_ELEM_NUM ... };
+
+Here the same role is played by a runtime registry keyed by
+(backend/hardware, dtype) with optional per-problem-shape tuned overrides
+persisted to JSON (the tuner writes them; Tab. 4 of the paper is exactly
+such a table).  Model/kernel code only ever asks ``get_tile_config`` —
+tuning never touches implementation code.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.tile_config import TileConfig
+
+# ---------------------------------------------------------------------------
+# Defaults (the #define GPU_ELEM_NUM / OMP_ELEM_NUM analogue): reasonable
+# untuned starting points per backend & dtype — the paper's "20% of peak"
+# baseline configuration.
+# ---------------------------------------------------------------------------
+_DEFAULTS: Dict[Tuple[str, str], TileConfig] = {
+    ("tpu-v5e", "bfloat16"): TileConfig(128, 128, 128),
+    ("tpu-v5e", "float32"): TileConfig(128, 128, 128),
+    ("host-cpu", "bfloat16"): TileConfig(32, 32, 32),
+    ("host-cpu", "float32"): TileConfig(32, 32, 32),
+}
+_FALLBACK = TileConfig(128, 128, 128)
+
+
+def _key_str(hardware: str, dtype, m=None, k=None, n=None) -> str:
+    dt = jnp.dtype(dtype).name
+    if m is None:
+        return f"{hardware}/{dt}"
+    return f"{hardware}/{dt}/{m}x{k}x{n}"
+
+
+class TileRegistry:
+    """Thread-safe tuned-parameter store with JSON persistence."""
+
+    def __init__(self, path: Optional[str] = None):
+        self._lock = threading.Lock()
+        self._tuned: Dict[str, TileConfig] = {}
+        self._path = path
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # -- lookup --------------------------------------------------------
+    def get(self, hardware: str, dtype, m: int = None, k: int = None,
+            n: int = None) -> TileConfig:
+        """Most-specific-first: tuned (hw, dtype, shape) -> tuned (hw, dtype)
+        -> built-in default -> fallback."""
+        with self._lock:
+            if m is not None:
+                hit = self._tuned.get(_key_str(hardware, dtype, m, k, n))
+                if hit is not None:
+                    return hit
+            hit = self._tuned.get(_key_str(hardware, dtype))
+            if hit is not None:
+                return hit
+        return _DEFAULTS.get((hardware, jnp.dtype(dtype).name), _FALLBACK)
+
+    # -- update --------------------------------------------------------
+    def put(self, cfg: TileConfig, hardware: str, dtype, m: int = None,
+            k: int = None, n: int = None) -> None:
+        with self._lock:
+            self._tuned[_key_str(hardware, dtype, m, k, n)] = cfg
+
+    # -- persistence (Tab. 4 as a file) ---------------------------------
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self._path
+        if not path:
+            raise ValueError("no path for registry save")
+        with self._lock:
+            blob = {k: [c.bm, c.bk, c.bn] for k, c in self._tuned.items()}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            blob = json.load(f)
+        with self._lock:
+            for k, (bm, bk, bn) in blob.items():
+                self._tuned[k] = TileConfig(bm=bm, bk=bk, bn=bn)
+
+    def entries(self) -> Dict[str, TileConfig]:
+        with self._lock:
+            return dict(self._tuned)
+
+
+# Process-global registry (models import this).
+GLOBAL_REGISTRY = TileRegistry()
+
+
+def get_tile_config(hardware: str, dtype, m: int = None, k: int = None,
+                    n: int = None) -> TileConfig:
+    return GLOBAL_REGISTRY.get(hardware, dtype, m, k, n)

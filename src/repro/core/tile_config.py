@@ -1,0 +1,123 @@
+"""Tuning parameters carried OUTSIDE the kernel (paper Listing 1.1).
+
+``TileConfig`` is the TPU generalization of the paper's single tile size
+``T``: the square CPU/GPU tile becomes a rectangular (bm, bk, bn) block with
+MXU/VPU alignment constraints.  ``TuningSpace`` enumerates the candidates the
+tuner sweeps — the analogue of the paper's power-of-two T/thread sweep
+(Figs. 3/4) — with the cache-capacity constraint K(S,T) <= cache (Eq. 5)
+made *explicit* against the VMEM budget instead of discovered empirically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.hardware import HardwareSpec, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class TileConfig:
+    """Block sizes of the single-source GEMM.  Hashable & static-arg safe."""
+    bm: int = 128
+    bk: int = 128
+    bn: int = 128
+
+    def vmem_working_set(self, in_dtype, out_dtype=None) -> int:
+        """Rectangular generalization of paper Eq. 5:  K(S,T) = 2 T^2 S.
+
+        A-tile + B-tile (+ C-tile when beta != 0, counted always for safety)
+        in the input dtype, plus the f32 accumulator scratch.
+        """
+        s_in = jnp.dtype(in_dtype).itemsize
+        s_out = jnp.dtype(out_dtype or in_dtype).itemsize
+        return (self.bm * self.bk + self.bk * self.bn) * s_in \
+            + self.bm * self.bn * (4 + s_out)
+
+    def fits(self, hw: HardwareSpec, in_dtype, out_dtype=None,
+             headroom: float = 0.9) -> bool:
+        # Pallas double-buffers input windows: 2x the A/B tile footprint.
+        s_in = jnp.dtype(in_dtype).itemsize
+        s_out = jnp.dtype(out_dtype or in_dtype).itemsize
+        need = 2 * (self.bm * self.bk + self.bk * self.bn) * s_in \
+            + self.bm * self.bn * (4 + s_out)
+        return need <= hw.vmem_bytes * headroom
+
+    def aligned(self, hw: HardwareSpec, in_dtype) -> bool:
+        """MXU/VPU alignment: minor dim multiple of 128, second-minor of the
+        dtype-dependent sublane count (8 for f32, 16 for bf16)."""
+        sub = hw.sublane * (2 if jnp.dtype(in_dtype).itemsize == 2 else 1)
+        return (self.bn % hw.mxu_dim == 0 and self.bk % hw.mxu_dim == 0
+                and self.bm % sub == 0)
+
+    @property
+    def label(self) -> str:
+        return f"{self.bm}x{self.bk}x{self.bn}"
+
+
+# Paper-faithful square tiles (the paper sweeps one T): bm = bn = bk = T.
+def square(t: int) -> TileConfig:
+    return TileConfig(bm=t, bk=t, bn=t)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningSpace:
+    """Candidate enumeration for the sweep.
+
+    ``square_only=True`` reproduces the paper's 1-parameter sweep exactly;
+    the default rectangular space is the beyond-paper TPU generalization.
+    """
+    bm_candidates: Sequence[int] = (64, 128, 256, 512)
+    bk_candidates: Sequence[int] = (128, 256, 512, 1024)
+    bn_candidates: Sequence[int] = (128, 256, 512, 1024)
+    square_only: bool = False
+
+    def candidates(self, hw: HardwareSpec = TPU_V5E,
+                   in_dtype=jnp.bfloat16,
+                   m: int = None, k: int = None, n: int = None,
+                   ) -> Iterator[TileConfig]:
+        """Yield feasible, aligned candidates (VMEM predicate from Eq. 5).
+
+        If problem dims are given, blocks larger than the (padded) problem
+        are skipped — tiles never exceed the matrix, as in the paper.
+        """
+        if self.square_only:
+            tiles = sorted(set(self.bm_candidates)
+                           | set(self.bk_candidates) & set(self.bn_candidates))
+            combos = list((t, t, t) for t in tiles)
+        else:
+            combos = list(itertools.product(
+                self.bm_candidates, self.bk_candidates, self.bn_candidates))
+
+        def feasible(cap_dims: bool):
+            for bm, bk, bn in combos:
+                cfg = TileConfig(bm=bm, bk=bk, bn=bn)
+                if not cfg.aligned(hw, in_dtype):
+                    continue
+                if not cfg.fits(hw, in_dtype):
+                    continue
+                if cap_dims:
+                    if m is not None and bm > max(m, hw.sublane):
+                        continue
+                    if k is not None and bk > max(k, hw.mxu_dim):
+                        continue
+                    if n is not None and bn > max(n, hw.mxu_dim):
+                        continue
+                yield cfg
+
+        out = list(feasible(cap_dims=True))
+        if not out:
+            # problem smaller than every candidate block: padding applies,
+            # so the single-block configs are the right space
+            out = sorted(set(feasible(cap_dims=False)))[:8]
+        yield from out
+
+
+# A small space usable in interpret-mode measurement on CPU (tiny problems).
+INTERPRET_SPACE = TuningSpace(
+    bm_candidates=(8, 16, 32, 64),
+    bk_candidates=(16, 32, 64),
+    bn_candidates=(16, 32, 64),
+)

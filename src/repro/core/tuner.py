@@ -1,0 +1,121 @@
+"""Autotuner: the paper's parameter sweep (Figs. 3/4) as a reusable engine.
+
+Two scoring modes, matching how the paper and this container differ:
+
+* ``mode="model"``  — score every candidate with the analytic TPU cost model
+  (no hardware needed; used for the TPU-v5e target on this CPU container).
+* ``mode="measure"`` — wall-clock the actual execution (pallas-interpret or
+  XLA on CPU).  Like the paper we keep the *best* of ``repeats`` runs
+  ("keeping the maximum over ten runs", §2).
+
+The sweep result is returned in full (not just the argmax) so the benchmark
+harness can render the paper's tuning curves, and the winner is written into
+the registry — producing the machine equivalent of paper Tab. 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model
+from repro.core.hardware import HardwareSpec, TPU_V5E, HOST_CPU
+from repro.core.registry import GLOBAL_REGISTRY, TileRegistry
+from repro.core.tile_config import TileConfig, TuningSpace
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    config: TileConfig
+    seconds: float
+    gflops: float
+    source: str  # "model" | "measure"
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    m: int
+    k: int
+    n: int
+    dtype: str
+    hardware: str
+    points: List[SweepPoint]
+
+    @property
+    def best(self) -> SweepPoint:
+        return min(self.points, key=lambda p: p.seconds)
+
+
+def _measure(fn: Callable[[], jax.Array], repeats: int) -> float:
+    fn().block_until_ready()  # compile / warm up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep_gemm(
+    m: int, k: int, n: int,
+    *,
+    dtype=jnp.float32,
+    space: Optional[TuningSpace] = None,
+    hardware: HardwareSpec = TPU_V5E,
+    mode: str = "model",
+    backend: str = ops.BACKEND_PALLAS_INTERPRET,
+    repeats: int = 3,
+    registry: Optional[TileRegistry] = None,
+    record: bool = True,
+) -> SweepResult:
+    """Sweep tile configs for one GEMM problem; optionally record the winner."""
+    space = space or TuningSpace()
+    flops = 2.0 * m * k * n
+    points: List[SweepPoint] = []
+
+    if mode == "measure":
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32).astype(dtype)
+
+    for cfg in space.candidates(hardware, dtype, m=m, k=k, n=n):
+        if mode == "model":
+            cost = cost_model.gemm_cost(m, k, n, cfg, hardware, dtype)
+            secs = cost.total_s
+        elif mode == "measure":
+            fn = jax.jit(lambda a, b, c=cfg: ops.gemm(a, b, config=c, backend=backend))
+            secs = _measure(lambda: fn(a, b), repeats)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        points.append(SweepPoint(cfg, secs, flops / secs / 1e9, mode))
+
+    if not points:
+        raise ValueError(
+            f"tuning space empty for ({m},{k},{n}) {jnp.dtype(dtype).name} on {hardware.name}")
+
+    result = SweepResult(m=m, k=k, n=n, dtype=jnp.dtype(dtype).name,
+                         hardware=hardware.name, points=points)
+    if record:
+        reg = registry or GLOBAL_REGISTRY
+        reg.put(result.best.config, hardware.name, dtype, m, k, n)
+    return result
+
+
+def tune_model_gemms(shapes, *, dtype=jnp.bfloat16,
+                     hardware: HardwareSpec = TPU_V5E,
+                     registry: Optional[TileRegistry] = None) -> dict:
+    """Tune every (m, k, n) a model emits (collected via gemm_api tracing).
+
+    Returns {shape: best TileConfig}.  This is the 'auto-tuning in a later
+    step' the paper's §1.1 anticipates.
+    """
+    out = {}
+    for (m, k, n) in sorted(set(shapes)):
+        res = sweep_gemm(m, k, n, dtype=dtype, hardware=hardware,
+                         mode="model", registry=registry)
+        out[(m, k, n)] = res.best.config
+    return out

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules, batch_shardings, cache_shardings, param_shardings,
+    param_specs, rules_for_mesh,
+)

@@ -1,0 +1,84 @@
+"""Ambient activation-sharding policy.
+
+GSPMD propagation alone can pick pathological layouts deep inside a scanned
+step (verified: it replicated the batch dim of attention scores and ran the
+full-vocab unembed per device).  The fix, as in MaxText-class frameworks, is
+explicit ``with_sharding_constraint`` pins on the residual stream and logits.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, kind)``; the policy
+(mesh + rules) is installed by the launcher/trainer around tracing, and the
+call is a no-op when no policy is installed (single-device tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+class ActivationPolicy:
+    def __init__(self, mesh: Mesh, rules):
+        self.mesh = mesh
+        self.rules = rules
+
+    def spec_for(self, kind: str, rank: int, batch_size: int) -> Optional[P]:
+        r = self.rules
+        ba = r.batch_axes
+        # batch shardable?
+        size = 1
+        for a in (ba if isinstance(ba, tuple) else (ba,)):
+            size *= self.mesh.shape[a]
+        bspec = ba if batch_size % size == 0 else None
+        seq = r.sequence_axis
+        if kind == "hidden":        # (B, S, D)
+            return P(bspec, seq, None)
+        if kind == "tokens":        # (B, S)
+            return P(bspec, seq)
+        if kind == "logits":        # (B, S, V) or (B, V)
+            ta = r.tensor_axis
+            if rank == 3:
+                # under SP the tensor axis is on the sequence dim already
+                return P(bspec, seq, None if seq == ta else ta)
+            return P(bspec, ta)
+        if kind == "batch_only":    # (B, ...)
+            return P(*([bspec] + [None] * (rank - 1)))
+        if kind == "moe_dispatch":  # (B, E, C, D): experts on the tensor axis
+            # Pinning the expert dim forces the B-shard -> E-shard transition
+            # to lower as all-to-all instead of a full all-gather.
+            return P(bspec, r.tensor_axis, None, None)
+        return None
+
+
+def set_policy(policy: Optional[ActivationPolicy]):
+    _TLS.policy = policy
+
+
+def get_policy() -> Optional[ActivationPolicy]:
+    return getattr(_TLS, "policy", None)
+
+
+@contextlib.contextmanager
+def activation_policy(mesh: Mesh, rules):
+    old = get_policy()
+    set_policy(ActivationPolicy(mesh, rules))
+    try:
+        yield
+    finally:
+        set_policy(old)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Pin ``x`` to the policy's layout; identity when no policy installed."""
+    pol = get_policy()
+    if pol is None:
+        return x
+    spec = pol.spec_for(kind, x.ndim, x.shape[0])
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical hot spots (the paper's GEMM)."""
+from repro.kernels.ops import (  # noqa: F401
+    BACKEND_PALLAS_INTERPRET, BACKEND_PALLAS_TPU, BACKEND_REF, BACKEND_XLA,
+    BACKENDS, batched_gemm, gemm,
+)

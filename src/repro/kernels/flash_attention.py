@@ -1,0 +1,116 @@
+"""Flash attention (online-softmax) Pallas kernel — beyond-paper kernel.
+
+Motivation from the roofline (§Perf): attention-heavy train cells are
+memory-term dominated because materialized (S x S) score tensors round-trip
+HBM.  This kernel streams KV blocks through VMEM with the online-softmax
+recurrence (Dao et al.), so scores never touch HBM: per (bq x d) output tile
+the HBM traffic is q + k + v + o — the same "bigger tile => higher arithmetic
+intensity" argument as the paper's Eq. 7, applied to attention.
+
+Single-source discipline as for GEMM: block sizes (bq, bk) arrive from
+outside; the kernel body is architecture-agnostic.  Validated in interpret
+mode against ``ref.attention_ref`` (tests/test_flash_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, n_kv: int, scale: float, causal: bool,
+                  bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)            # (bk, d)
+
+    s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_scr[...]                          # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                       # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, bq: int = 128, bk: int = 128,
+    scale: Optional[float] = None, interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (BH, S, d) with S % bq == 0 == S_kv % bk.  One head-batch
+    per grid row; online softmax over kv blocks (the 'arbitrary' grid dim)."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    scale = d ** -0.5 if scale is None else scale
+    n_kv = skv // bk
+    grid = (bh, sq // bq, n_kv)
+
+    kernel = functools.partial(
+        _flash_kernel, n_kv=n_kv, scale=scale, causal=causal, bq=bq, bk=bk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = False) -> jax.Array:
+    """GQA front end: q (B, S, H, d); k, v (B, S_kv, KV, d) -> (B, S, H, d)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    if kvh != h:  # expand grouped KV heads (wrapper-level; kernel stays pure)
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    out = flash_attention_bhsd(qb, kb, vb, causal=causal, bq=min(bq, sq),
+                               bk=min(bk, skv), interpret=interpret)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

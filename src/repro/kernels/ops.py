@@ -1,0 +1,125 @@
+"""Jit'd wrappers around the single-source Pallas GEMM.
+
+Responsibilities kept OUT of the kernel (so the kernel stays single-source):
+  * padding arbitrary operand shapes up to block multiples,
+  * backend execution choice (pallas-tpu / pallas-interpret / xla / ref),
+  * batching over leading dims.
+
+This is the layer where Alpaka's "back end" concept lives: the same logical
+GEMM runs through whichever execution engine the registry selects — exactly
+like the paper compiling one source with nvcc / icc / gcc / xlc.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.gemm import gemm_pallas
+
+# Execution backends (paper Tab. 3 analogue).
+BACKEND_PALLAS_TPU = "pallas-tpu"          # target hardware path
+BACKEND_PALLAS_INTERPRET = "pallas-interpret"  # CPU validation of the kernel
+BACKEND_XLA = "xla"                         # vendor-library analogue (cuBLAS/MKL)
+BACKEND_REF = "ref"                         # pure-jnp oracle
+BACKENDS = (BACKEND_PALLAS_TPU, BACKEND_PALLAS_INTERPRET, BACKEND_XLA, BACKEND_REF)
+
+
+def _pad_to(x: jax.Array, multiples) -> jax.Array:
+    pads = []
+    needs = False
+    for dim, mult in zip(x.shape, multiples):
+        pad = (-dim) % mult
+        pads.append((0, pad))
+        needs = needs or pad
+    return jnp.pad(x, pads) if needs else x
+
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    config=None,            # core.tile_config.TileConfig | None
+    backend: str = BACKEND_XLA,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    bf16_partials: bool = False,
+) -> jax.Array:
+    """2-D GEMM with automatic padding to the tile grid.
+
+    ``config`` carries the architecture-tuned block sizes; it is required for
+    the pallas backends and ignored by xla/ref (which have no exposed tiles —
+    the "vendor library" case of the paper).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == BACKEND_REF:
+        return _ref.gemm_ref(a, b, c, alpha=alpha, beta=beta, bias=bias,
+                             activation=activation, out_dtype=out_dtype)
+    if backend == BACKEND_XLA:
+        return _xla_gemm(a, b, c, alpha=alpha, beta=beta, bias=bias,
+                         activation=activation, out_dtype=out_dtype,
+                         bf16_partials=bf16_partials)
+
+    if config is None:
+        raise ValueError("pallas backends need a TileConfig (use core.registry)")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bk, bn = config.bm, config.bk, config.bn
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b, (bk, bn))
+    c_p = _pad_to(c, (bm, bn)) if c is not None else None
+    bias_p = _pad_to(bias, (bn,)) if bias is not None else None
+    out = gemm_pallas(
+        a_p, b_p, c_p,
+        bm=bm, bk=bk, bn=bn,
+        alpha=alpha, beta=beta, bias=bias_p, activation=activation,
+        out_dtype=out_dtype,
+        interpret=(backend == BACKEND_PALLAS_INTERPRET),
+    )
+    if out.shape != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def _xla_gemm(a, b, c=None, *, alpha, beta, bias, activation, out_dtype,
+              bf16_partials=False):
+    """XLA dot path — same semantics, tiling delegated to the XLA compiler.
+
+    This is the baseline the paper calls "vendor library": no exposed tuning
+    parameters.  Still forces f32 MXU accumulation for parity (per shard;
+    see ExecutionContext.bf16_partials for the cross-shard reduction dtype).
+    """
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    pref = jnp.float32
+    if bf16_partials and a.dtype.itemsize <= 2 and b.dtype.itemsize <= 2 \
+            and bias is None and activation is None and c is None:
+        pref = jnp.bfloat16
+    acc = jnp.dot(a, b, preferred_element_type=pref)
+    if alpha != 1.0:
+        acc = alpha * acc
+    if c is not None:
+        acc = acc + beta * c.astype(jnp.float32)
+    acc = _ref.apply_epilogue(acc, bias=bias, activation=activation)
+    return acc.astype(out_dtype)
+
+
+def batched_gemm(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """GEMM over shared leading batch dims via vmap of the single source."""
+    if a.ndim != b.ndim:
+        raise ValueError(f"rank mismatch {a.shape} vs {b.shape}")
+    fn = functools.partial(gemm, **kw)
+    for _ in range(a.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(a, b)
+
+
+jit_gemm = jax.jit(gemm, static_argnames=(
+    "config", "backend", "alpha", "beta", "activation", "out_dtype"))

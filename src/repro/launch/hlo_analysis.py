@@ -1,0 +1,73 @@
+"""HLO-text analysis: collective-operand byte accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the post-SPMD HLO
+(``compiled.as_text()``) and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+The result shape is the canonical proxy for bytes crossing links per device
+(ring all-gather: each device receives ~the full gathered buffer; all-reduce
+~2x this — we record the op breakdown so either convention can be applied).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# one shape token, e.g. bf16[256,4096]{1,0} or f32[]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# lhs of a collective instruction: "%name = <shape-or-tuple> <op>("
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """-> {op_name: summed result bytes} + {"total": ..., "count": ...}.
+
+    ``-start`` variants are counted, ``-done`` skipped (same buffer).
+    all-gather-start results can be tuples (operand, result); counting the
+    tuple is the conservative upper bound.
+    """
+    out: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if f"{m.group(2)}-done(" in line:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+        count += 1
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    out["count"] = count
+    return out
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "convolution",
+                                     "dynamic-update-slice", "reshape",
+                                     "transpose", "scatter", "gather")) -> Dict[str, int]:
+    """Rough occurrence counts — used to spot remat duplication / layout churn."""
+    hist = {}
+    for op in ops:
+        hist[op] = len(re.findall(rf"\b{op}\(", hlo_text))
+    return hist

@@ -1,0 +1,182 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step on
+TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+  compute    = HLO_FLOPs_per_device / peak
+  memory     = HLO_traffic_bytes_per_device / HBM_bw
+  collective = per-device link bytes (ring model) / link_bw
+
+HLO_* come from the trip-count-corrected analyzer (hlo_stats.py), since
+cost_analysis() counts scan bodies once.  MODEL_FLOPS = 6*N*D (train) or
+2*N*D (inference), N = active params.  The MODEL/HLO ratio flags
+remat/redundant compute; dominant term = the bottleneck the perf loop
+iterates on.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --results results/dryrun.json
+  ... --emit markdown   (table for EXPERIMENTS.md)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.core.hardware import TPU_V5E
+
+PEAK_BF16 = TPU_V5E.peak_flops["bfloat16"]     # 197e12
+HBM_BW = TPU_V5E.hbm_bandwidth                  # 819e9
+LINK_BW = TPU_V5E.ici_link_bandwidth            # 50e9
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "OK":
+        return None
+    hs = rec["hlo_stats"]
+    chips = rec["chips"]
+    compute_s = hs["flops"] / PEAK_BF16
+    memory_s = hs["traffic_bytes"] / HBM_BW
+    collective_s = hs["collective_link_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    est_step = max(terms.values())
+    model_flops_dev = rec["model_flops"] / chips
+    ratio = model_flops_dev / hs["flops"] if hs["flops"] else 0.0
+    # MFU proxy: useful model flops per second vs peak, at the estimated
+    # bottleneck-bound step time (the "fraction of roofline" score).
+    mfu = model_flops_dev / est_step / PEAK_BF16 if est_step else 0.0
+    hw_util = hs["flops"] / est_step / PEAK_BF16 if est_step else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "est_step_s": est_step, "model_flops": rec["model_flops"],
+        "model_hlo_ratio": ratio, "mfu_proxy": mfu, "hw_util": hw_util,
+        "collective_count": hs["collective_count"],
+    }
+
+
+_ADVICE = {
+    "compute": ("reduce issued FLOPs: lighter remat policy (save attn/ffn "
+                "outputs), cast residual compute to bf16, larger fused GEMMs "
+                "for better MXU occupancy"),
+    "memory": ("raise arithmetic intensity: bigger effective GEMM tiles "
+               "(paper Eq. 7), fuse epilogues, chunk the vocab unembed, "
+               "keep KV/states in bf16"),
+    "collective": ("cut link bytes: reduce-scatter+all-gather instead of "
+                   "all-reduce, int8 gradient compression on the DP axis, "
+                   "overlap TP collectives with the next block's GEMMs"),
+}
+
+
+def advice(row: dict) -> str:
+    return _ADVICE[row["dominant"]]
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def markdown_table(rows: List[dict], skips: List[dict]) -> str:
+    out = ["| arch | shape | mesh | kind | compute | memory | collective | "
+           "dominant | MODEL/HLO | MFU-proxy |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['model_hlo_ratio']:.2f} | {r['mfu_proxy'] * 100:.1f}% |")
+    for s in sorted(skips, key=lambda r: (r["arch"], r["shape"])):
+        out.append(f"| {s['arch']} | {s['shape']} | {s['mesh']} | — | SKIP | "
+                   f"| | | | |")
+    return "\n".join(out)
+
+
+def load_rows(path: str, mesh: Optional[str] = None):
+    with open(path) as f:
+        results = json.load(f)
+    rows, skips = [], []
+    for key, rec in results.items():
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if "#" in key or "tag" in rec:   # perf-iteration runs live in §Perf
+            continue
+        if rec.get("status") == "SKIP":
+            skips.append(rec)
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows, skips
+
+
+def perf_compare(path: str) -> str:
+    """§Perf view: baseline vs tagged (hillclimb) runs of the same cell."""
+    with open(path) as f:
+        results = json.load(f)
+    by_cell: Dict[str, List] = {}
+    for key, rec in results.items():
+        if rec.get("status") != "OK":
+            continue
+        cell, _, tag = key.partition("#")
+        by_cell.setdefault(cell, []).append((tag or "baseline", rec))
+    out = []
+    for cell, entries in sorted(by_cell.items()):
+        if len(entries) < 2:
+            continue
+        out.append(f"\n== {cell} ==")
+        entries.sort(key=lambda e: (e[0] != "baseline", e[0]))
+        base = None
+        for tag, rec in entries:
+            r = roofline_row(rec)
+            line = (f"  {tag:16s} C={fmt_s(r['compute_s']):>8s} "
+                    f"M={fmt_s(r['memory_s']):>8s} X={fmt_s(r['collective_s']):>8s}"
+                    f" dom={r['dominant']:10s} step={fmt_s(r['est_step_s']):>8s}"
+                    f" mfu={r['mfu_proxy'] * 100:5.1f}%")
+            if base is None:
+                base = r
+            else:
+                line += f"  [step x{base['est_step_s'] / r['est_step_s']:.2f}]"
+            out.append(line)
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--emit", default="text",
+                    choices=["text", "markdown", "json", "perf"])
+    args = ap.parse_args()
+
+    if args.emit == "perf":
+        print(perf_compare(args.results))
+        return
+
+    rows, skips = load_rows(args.results, args.mesh)
+    if args.emit == "json":
+        print(json.dumps(rows, indent=1))
+        return
+    if args.emit == "markdown":
+        print(markdown_table(rows, skips))
+        return
+    for r in sorted(rows, key=lambda r: r["est_step_s"], reverse=True):
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:6s} "
+              f"C={fmt_s(r['compute_s']):>8s} M={fmt_s(r['memory_s']):>8s} "
+              f"X={fmt_s(r['collective_s']):>8s} dom={r['dominant']:10s} "
+              f"ratio={r['model_hlo_ratio']:.2f} mfu={r['mfu_proxy'] * 100:5.1f}%")
+        print(f"{'':26s} -> {advice(r)}")
+    for s in skips:
+        print(f"{s['arch']:26s} {s['shape']:12s} SKIP: {s['reason'][:80]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns the abstract inputs of the step that
+cell lowers (train_step / prefill_step / decode_step) — weak-type-correct,
+shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import Model, build_model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(model: Model, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "labels": _sds((b, s), jnp.int32)}
+    batch.update(model.extra_inputs(b))
+    return batch
+
+
+def prefill_batch_specs(model: Model, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    batch.update(model.extra_inputs(b))
+    return batch
+
+
+def cache_specs(model: Model, shape: ShapeSpec):
+    """Abstract KV/recurrent cache sized for the cell's sequence length."""
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    return cache
+
+
+def decode_token_specs(shape: ShapeSpec):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[str, Dict[str, Any]]:
+    """-> (step_kind, kwargs-of-abstract-arrays) for the cell."""
+    model = build_model(cfg)
+    if shape.kind == "train":
+        return "train", {"batch": train_batch_specs(model, shape)}
+    if shape.kind == "prefill":
+        return "prefill", {"batch": prefill_batch_specs(model, shape),
+                           "cache": cache_specs(model, shape)}
+    if shape.kind == "decode":
+        return "decode", {"tokens": decode_token_specs(shape),
+                          "cache": cache_specs(model, shape),
+                          "offset": _sds((), jnp.int32)}
+    raise ValueError(shape.kind)

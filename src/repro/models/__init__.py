@@ -1,0 +1,1 @@
+from repro.models.model import Model, active_param_count, build_model  # noqa: F401

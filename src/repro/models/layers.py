@@ -1,0 +1,268 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (chunked), MLP.
+
+Every dense projection routes through ``core.matmul`` — the paper's
+single-source GEMM — so per-architecture tile tuning applies to the whole
+model zoo without touching this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import einsum, matmul
+from repro.models.params import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_template(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+                "bias": ParamSpec((d,), ("embed",), init="zeros")}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, *, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (with partial-dim fraction, as in ChatGLM / StableLM)
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, query-chunked for O(S * chunk) score memory, KV cache)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+    @property
+    def group(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+def attention_template(d_model: int, dims: AttnDims, qkv_bias: bool = False):
+    h, kv, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    t = {
+        "wq": ParamSpec((d_model, h * hd), ("embed", "ff")),
+        "wk": ParamSpec((d_model, kv * hd), ("embed", "ff")),
+        "wv": ParamSpec((d_model, kv * hd), ("embed", "ff")),
+        "wo": ParamSpec((h * hd, d_model), ("ff", "embed")),
+    }
+    if qkv_bias:
+        t["bq"] = ParamSpec((h * hd,), ("ff",), init="zeros")
+        t["bk"] = ParamSpec((kv * hd,), ("ff",), init="zeros")
+        t["bv"] = ParamSpec((kv * hd,), ("ff",), init="zeros")
+    return t
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, q_offset, kv_len: Optional[jax.Array],
+                  chunk: int = 1024, p_dtype=jnp.float32) -> jax.Array:
+    """Grouped scaled-dot-product attention, chunked over queries.
+
+    q: (B, Sq, KV, G, hd);  k, v: (B, Skv, KV, hd)
+    q_offset: scalar int — absolute position of q[0] (decode: cache length).
+    kv_len: optional scalar — number of valid cache entries (<= Skv).
+    """
+    b, sq, kvh, g, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(p_dtype)
+    col_ids = jnp.arange(skv)
+
+    def one_chunk(q_c, row0):
+        # q_c: (B, C, KV, G, hd)
+        s = einsum("bqkgd,btkd->bqkgt", q_c.astype(jnp.float32) * scale, kf)
+        mask = jnp.ones((q_c.shape[1], skv), jnp.bool_)
+        if causal:
+            rows = row0 + q_offset + jnp.arange(q_c.shape[1])
+            mask &= col_ids[None, :] <= rows[:, None]
+        if kv_len is not None:
+            mask &= col_ids[None, :] < kv_len
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(p_dtype)
+        return einsum("bqkgt,btkd->bqkgd", p, vf).astype(q.dtype)
+
+    if sq <= chunk:
+        return one_chunk(q, 0)
+    while sq % chunk:  # largest divisor <= chunk (e.g. whisper enc_len=1500)
+        chunk -= 1
+    n = sq // chunk
+    qs = q.reshape(b, n, chunk, kvh, g, hd).swapaxes(0, 1)
+    row0s = jnp.arange(n) * chunk
+    out = jax.lax.map(lambda args: one_chunk(*args), (qs, row0s))
+    return out.swapaxes(0, 1).reshape(b, sq, kvh, g, hd)
+
+
+def kv_quantize(x: jax.Array):
+    """Per-(token, head) symmetric int8 quantization of a (B,S,KV,hd) slab."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cross_kv(params, src: jax.Array, dims: AttnDims):
+    """Project encoder/image embeddings to the (static) cross K/V once."""
+    b = src.shape[0]
+    k = matmul(src, params["wk"], bias=params.get("bk")).reshape(b, -1, dims.num_kv_heads, dims.head_dim)
+    v = matmul(src, params["wv"], bias=params.get("bv")).reshape(b, -1, dims.num_kv_heads, dims.head_dim)
+    return k, v
+
+
+def attention(
+    params,
+    x: jax.Array,
+    dims: AttnDims,
+    *,
+    positions: Optional[jax.Array] = None,
+    rope_theta: float = 0.0,
+    rope_fraction: float = 1.0,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_offset: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    q_chunk: int = 1024,
+    p_dtype=jnp.float32,
+    attn_impl: str = "chunked",
+):
+    """Returns (out, new_kv_cache_or_None).
+
+    * self-attention: KV projected from ``x``; if ``kv_cache`` is given the
+      new KV is written at ``cache_offset`` and attention runs on the cache.
+    * cross-attention: pass precomputed ``kv_override`` (from ``cross_kv``);
+      non-causal, cache untouched.
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+
+    q = matmul(x, params["wq"], bias=params.get("bq"))
+    q = q.reshape(b, s, h, hd)
+
+    if kv_override is not None:
+        k, v = kv_override
+        qg = q.reshape(b, s, kvh, dims.group, hd)
+        out = _sdpa_chunked(qg, k, v, causal=False, q_offset=0,
+                            kv_len=None, chunk=q_chunk, p_dtype=p_dtype)
+        return matmul(out.reshape(b, s, h * hd), params["wo"]), None
+
+    k = matmul(x, params["wk"], bias=params.get("bk")).reshape(b, s, kvh, hd)
+    v = matmul(x, params["wv"], bias=params.get("bv")).reshape(b, s, kvh, hd)
+    if rope_theta:
+        q = apply_rope(q, positions, theta=rope_theta, fraction=rope_fraction)
+        k = apply_rope(k, positions, theta=rope_theta, fraction=rope_fraction)
+
+    if attn_impl == "flash" and kv_cache is None:
+        # Pallas flash-attention kernel: training / no-cache path only (the
+        # cache paths keep the chunked jnp implementation).  Interpret mode
+        # executes the kernel body on CPU; on TPU it compiles natively.
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=causal,
+                              interpret=jax.default_backend() != "tpu")
+        return matmul(out.reshape(b, s, h * hd), params["wo"]), None
+
+    new_cache = None
+    kv_len = None
+    q_offset = 0
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        if isinstance(ck, dict):   # int8-quantized cache: {"q": i8, "s": f32}
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            ck = {"q": jax.lax.dynamic_update_slice(ck["q"], kq, (0, cache_offset, 0, 0)),
+                  "s": jax.lax.dynamic_update_slice(ck["s"], ks, (0, cache_offset, 0))}
+            cv = {"q": jax.lax.dynamic_update_slice(cv["q"], vq, (0, cache_offset, 0, 0)),
+                  "s": jax.lax.dynamic_update_slice(cv["s"], vs, (0, cache_offset, 0))}
+            k = kv_dequantize(ck["q"], ck["s"], k.dtype)
+            v = kv_dequantize(cv["q"], cv["s"], v.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_offset, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_offset, 0, 0))
+            k, v = ck, cv
+        q_offset = cache_offset
+        kv_len = cache_offset + s
+        new_cache = (ck, cv)
+
+    qg = q.reshape(b, s, kvh, dims.group, hd)
+    out = _sdpa_chunked(qg, k, v, causal=causal, q_offset=q_offset,
+                        kv_len=kv_len, chunk=q_chunk, p_dtype=p_dtype)
+    out = out.reshape(b, s, h * hd)
+    return matmul(out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (llama-style SwiGLU) — fused activation epilogues via the kernel
+# ---------------------------------------------------------------------------
+
+def mlp_template(d_model: int, d_ff: int):
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "w_down": ParamSpec((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    gate = matmul(x, params["w_gate"], activation="silu")
+    up = matmul(x, params["w_up"])
+    return matmul(gate * up, params["w_down"])
+
+
+def mlp_gelu_template(d_model: int, d_ff: int):
+    """Whisper-style 2-matrix GELU MLP (with biases)."""
+    return {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "b_up": ParamSpec((d_ff,), ("ff",), init="zeros"),
+        "w_down": ParamSpec((d_ff, d_model), ("ff", "embed")),
+        "b_down": ParamSpec((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def mlp_gelu(params, x: jax.Array) -> jax.Array:
+    h = matmul(x, params["w_up"], bias=params["b_up"], activation="gelu")
+    return matmul(h, params["w_down"], bias=params["b_down"])

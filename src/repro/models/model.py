@@ -1,0 +1,94 @@
+"""Model factory: one uniform functional bundle per architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as H
+from repro.models import transformer as T
+from repro.models.params import (abstract_params, init_params, param_count,
+                                 ParamSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Functional model bundle (params are passed explicitly everywhere)."""
+    cfg: ModelConfig
+    template: Any                          # ParamSpec pytree
+
+    def init(self, key: jax.Array):
+        return init_params(self.template, key, default_dtype=self.cfg.dtype)
+
+    def abstract(self):
+        return abstract_params(self.template, default_dtype=self.cfg.dtype)
+
+    def param_count(self) -> int:
+        return param_count(self.template)
+
+    # family dispatch ---------------------------------------------------
+    def _mod(self):
+        return H if self.cfg.family in ("ssm", "hybrid") else T
+
+    def forward(self, params, batch: Dict[str, jax.Array]):
+        """-> (logits (B, S, V) f32, aux_loss)."""
+        return self._mod().forward(self.cfg, params, batch)
+
+    def forward_hidden(self, params, batch: Dict[str, jax.Array]):
+        """-> (final hidden pre-norm (B, S, D), aux_loss) — for chunked loss."""
+        return self._mod().forward_hidden(self.cfg, params, batch)
+
+    def unembed_weight(self, params):
+        from repro.models import transformer as _T
+        return _T.unembed_weight(self.cfg, params)
+
+    def final_norm(self, params, x):
+        from repro.models import layers as _L
+        return _L.apply_norm(params["ln_f"], x, eps=self.cfg.norm_eps)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        return self._mod().init_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, batch, cache):
+        return self._mod().prefill(self.cfg, params, batch, cache)
+
+    def decode_step(self, params, tokens, cache, offset):
+        return self._mod().decode_step(self.cfg, params, tokens, cache, offset)
+
+    # extra model inputs beyond tokens (modality-frontend STUBS) ---------
+    def extra_inputs(self, batch_size: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.family == "vlm":
+            return {"image_embeds": jax.ShapeDtypeStruct(
+                (batch_size, cfg.num_image_tokens, cfg.d_model), dt)}
+        if cfg.family == "audio":
+            return {"encoder_embeds": jax.ShapeDtypeStruct(
+                (batch_size, cfg.encoder_len, cfg.d_model), dt)}
+        return {}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("ssm", "hybrid"):
+        tpl = H.template(cfg)
+    elif cfg.family in ("dense", "moe", "vlm", "audio"):
+        tpl = T.template(cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return Model(cfg=cfg, template=tpl)
+
+
+def active_param_count(model: Model) -> int:
+    """Per-token active parameters (MoE counts top-k experts only) — used
+    for MODEL_FLOPS = 6 * N_active * D in the roofline."""
+    cfg = model.cfg
+    total = model.param_count()
+    if not cfg.num_experts:
+        return total
+    # Expert weights: 3 * d_model * d_ff per expert per layer.
+    per_layer_exp = 3 * cfg.d_model * cfg.d_ff
+    inactive = cfg.num_layers * per_layer_exp * (cfg.num_experts - cfg.experts_per_token)
+    return total - inactive

@@ -1,0 +1,92 @@
+"""AdamW with f32 master weights, built as a pytree-functional optimizer.
+
+State layout (per parameter leaf):
+  m, v     — f32 moments
+  master   — f32 master copy IF the param dtype is lower precision (bf16);
+             otherwise the param itself is the master (no copy stored).
+
+All state leaves inherit the parameter's PartitionSpec, so FSDP sharding of
+the optimizer state (ZeRO-style) falls out of the param sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+    master: Any      # f32 masters (same tree; equals params when f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+
+    def _lr(self, count):
+        lr = self.learning_rate
+        return lr(count) if callable(lr) else jnp.float32(lr)
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        master = jax.tree_util.tree_map(
+            lambda p: jnp.copy(p.astype(jnp.float32)), params)  # never alias params
+        return AdamWState(count=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree_util.tree_map(jnp.copy, zeros),
+                          master=master)
+
+    def abstract_state(self, abstract_params) -> AdamWState:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(
+            count=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree_util.tree_map(f32, abstract_params),
+            v=jax.tree_util.tree_map(f32, abstract_params),
+            master=jax.tree_util.tree_map(f32, abstract_params))
+
+    def update(self, grads, state: AdamWState, params):
+        """-> (new_params, new_state, metrics)."""
+        count = state.count + 1
+        gf = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+        gnorm = global_norm(gf)
+        if self.grad_clip_norm is not None:
+            scale = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-9))
+            gf = jax.tree_util.tree_map(lambda g: g * scale, gf)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                                   state.m, gf)
+        v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                                   state.v, gf)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        def upd(master, mm, vv):
+            step = (mm / c1) / (jnp.sqrt(vv / c2) + self.eps)
+            if self.weight_decay and master.ndim >= 2:  # no decay on norms/bias
+                step = step + self.weight_decay * master
+            return master - lr * step
+
+        master = jax.tree_util.tree_map(upd, state.master, m, v)
+        new_params = jax.tree_util.tree_map(
+            lambda ms, p: ms.astype(p.dtype), master, params)
+        return new_params, AdamWState(count, m, v, master), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,80 @@
+"""Batched serving engine: continuous prefill + decode with a static KV cache.
+
+Simple but production-shaped: fixed-capacity batch slots, greedy or
+temperature sampling, per-request stop handling, jit'd prefill/decode steps
+reused across requests (no recompilation per request).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    temperature: float = 0.0          # 0 => greedy
+    eos_token: Optional[int] = None
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.cfg.temperature, axis=-1)
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int,
+                 extra_inputs: Optional[Dict[str, jax.Array]] = None
+                 ) -> List[List[int]]:
+        """Batched generation.  Prompts are right-aligned padded to a common
+        length (static shapes => one compilation)."""
+        cfg = self.cfg
+        assert len(prompts) <= cfg.max_batch
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(prompts):  # left-pad with repeats of first token
+            toks[i, plen - len(p):] = p
+            toks[i, :plen - len(p)] = p[0]
+
+        batch = {"tokens": jnp.asarray(toks)}
+        if extra_inputs:
+            batch.update(extra_inputs)
+
+        cache = self.model.init_cache(b, plen + max_new_tokens)
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        key = jax.random.PRNGKey(cfg.seed)
+        outs = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        offset = jnp.int32(plen)
+        cur = self._sample(logits, key)
+        for step in range(max_new_tokens):
+            cur_np = np.asarray(jax.device_get(cur))
+            for i in range(b):
+                if not done[i]:
+                    outs[i].append(int(cur_np[i]))
+                    if cfg.eos_token is not None and cur_np[i] == cfg.eos_token:
+                        done[i] = True
+            if done.all() or step == max_new_tokens - 1:
+                break
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cur[:, None], cache, offset)
+            offset = offset + 1
+            cur = self._sample(logits, sub)
+        return outs

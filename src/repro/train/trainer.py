@@ -1,0 +1,192 @@
+"""Training step construction + the training loop.
+
+``make_train_step`` builds the pure step function (grad accumulation over
+microbatches, optional int8 gradient compression with error feedback,
+AdamW with f32 masters); ``Trainer`` wires it to the data pipeline,
+checkpointing and fault-tolerance policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.models.model import Model
+from repro.optim import compression as comp
+from repro.optim.adamw import AdamW, AdamWState
+from repro.train.loss import lm_loss
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: AdamWState
+    compression: Optional[comp.CompressionState]
+
+
+def init_train_state(model: Model, optimizer: AdamW, key,
+                     use_compression: bool = False) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt=optimizer.init(params),
+        compression=comp.init_state(params) if use_compression else None)
+
+
+def abstract_train_state(model: Model, optimizer: AdamW,
+                         use_compression: bool = False) -> TrainState:
+    ap = model.abstract()
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=ap,
+        opt=optimizer.abstract_state(ap),
+        compression=comp.abstract_state(ap) if use_compression else None)
+
+
+def state_shardings(mesh: Mesh, rules: sh.ShardingRules, model: Model,
+                    use_compression: bool = False) -> TrainState:
+    ps = sh.param_shardings(mesh, rules, model.template)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        step=rep,
+        params=ps,
+        opt=AdamWState(count=rep, m=ps, v=ps, master=ps),
+        compression=comp.CompressionState(residual=ps) if use_compression else None)
+
+
+def make_train_step(model: Model, optimizer: AdamW, *,
+                    microbatches: int = 1,
+                    use_compression: bool = False) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(model, params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        # Gradient accumulation: split the global batch along dim 0 and scan.
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        micro = jax.tree_util.tree_map(split, batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches, acc, grads)
+            return (acc, loss_acc + loss / microbatches), None
+
+        (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), micro)
+        return loss, {}, grads
+
+    def train_step(state: TrainState, batch) -> tuple:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        new_comp = state.compression
+        if use_compression:
+            grads, new_comp = comp.compress_grads(grads, state.compression)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state.opt, state.params)
+        new_state = TrainState(state.step + 1, new_params, new_opt, new_comp)
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (used by the dry-run and serve/engine.py)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, tokens, cache, offset):
+        return model.decode_step(params, tokens, cache, offset)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Training loop with fault-tolerance hooks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    microbatches: int = 1
+    use_compression: bool = False
+    step_deadline_s: Optional[float] = None   # straggler watchdog
+
+
+class Trainer:
+    def __init__(self, model: Model, optimizer: AdamW, data_iter,
+                 cfg: TrainerConfig, mesh: Optional[Mesh] = None,
+                 rules: Optional[sh.ShardingRules] = None,
+                 checkpointer=None):
+        self.model = model
+        self.optimizer = optimizer
+        self.data_iter = data_iter
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.checkpointer = checkpointer
+        step = make_train_step(model, optimizer,
+                               microbatches=cfg.microbatches,
+                               use_compression=cfg.use_compression)
+        if mesh is not None:
+            from repro.distributed.ctx import activation_policy
+            shardings = state_shardings(mesh, rules, model, cfg.use_compression)
+
+            def step_with_policy(state, batch):
+                with activation_policy(mesh, rules):
+                    return step(state, batch)
+
+            self._step = jax.jit(step_with_policy,
+                                 in_shardings=(shardings, None),
+                                 out_shardings=(shardings, None),
+                                 donate_argnums=(0,))
+        else:
+            self._step = jax.jit(step, donate_argnums=(0,))
+
+    def run(self, state: TrainState, start_step: int = 0):
+        """Run to total_steps; returns (state, history).  Deterministic data
+        (keyed by step) makes restart-after-failure exactly replayable."""
+        history = []
+        for step_idx in range(start_step, self.cfg.total_steps):
+            batch = self.data_iter(step_idx)
+            t0 = time.perf_counter()
+            state, metrics = self._step(state, batch)
+            if self.cfg.step_deadline_s is not None:
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if dt > self.cfg.step_deadline_s:
+                    # Straggler policy: surface the event; the launcher decides
+                    # whether to evict the slow host and re-shard (elastic).
+                    metrics = dict(metrics)
+                    metrics["straggler_flag"] = jnp.float32(dt)
+            if (step_idx + 1) % self.cfg.log_every == 0:
+                history.append((step_idx + 1,
+                                float(jax.device_get(metrics["loss"]))))
+            if (self.checkpointer is not None
+                    and (step_idx + 1) % self.cfg.checkpoint_every == 0):
+                self.checkpointer.save(step_idx + 1, state)
+        return state, history

@@ -1,0 +1,62 @@
+"""Serving-engine coverage for the stub-frontend families (VLM, audio) and
+temperature sampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.catalog import ARCHITECTURES
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig
+
+
+def _engine(arch, temperature=0.0):
+    cfg = ARCHITECTURES[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_batch=2, max_len=64,
+                                            temperature=temperature))
+    extra = {k: 0.02 * jax.random.normal(jax.random.PRNGKey(2), sds.shape
+                                         ).astype(sds.dtype)
+             for k, sds in model.extra_inputs(2).items()}
+    return cfg, model, params, eng, extra
+
+
+def test_vlm_generation_conditions_on_image():
+    cfg, model, params, eng, extra = _engine("llama-3.2-vision-11b")
+    prompts = [[1, 2, 3], [4, 5, 6]]
+    out_a = eng.generate(prompts, 4, extra_inputs=extra)
+    # different image embeddings must be able to change the generation
+    extra_b = {k: v + 1.0 for k, v in extra.items()}
+    out_b = eng.generate(prompts, 4, extra_inputs=extra_b)
+    assert all(len(o) == 4 for o in out_a + out_b)
+    # not asserting inequality per-token (tiny random model), but outputs
+    # must be valid token ids
+    for o in out_a + out_b:
+        assert all(0 <= t < cfg.vocab_size for t in o)
+
+
+def test_whisper_generation_runs():
+    cfg, model, params, eng, extra = _engine("whisper-large-v3")
+    outs = eng.generate([[7, 8], [9, 10]], 5, extra_inputs=extra)
+    assert all(len(o) == 5 for o in outs)
+
+
+def test_temperature_sampling_varies():
+    cfg, model, params, eng, extra = _engine("llama3.2-1b", temperature=2.0)
+    outs1 = eng.generate([[1, 2, 3, 4]], 12)
+    # same seed -> deterministic even with temperature
+    eng2 = Engine(model, params, ServeConfig(max_batch=2, temperature=2.0))
+    outs2 = eng2.generate([[1, 2, 3, 4]], 12)
+    assert outs1 == outs2
+
+
+def test_eos_stops_early():
+    cfg = ARCHITECTURES["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # find the greedy first token, then set it as EOS: generation len == 1
+    eng0 = Engine(model, params, ServeConfig(max_batch=1))
+    first = eng0.generate([[3, 1, 4]], 1)[0][0]
+    eng = Engine(model, params, ServeConfig(max_batch=1, eos_token=first))
+    outs = eng.generate([[3, 1, 4]], 8)
+    assert outs[0][0] == first and len(outs[0]) == 1

@@ -1,0 +1,93 @@
+"""Sharding-rule unit tests + an in-subprocess mini dry-run on an 8-device
+host mesh (subprocess isolates XLA_FLAGS from the 1-device test session)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.models.params import ParamSpec
+
+
+def test_param_spec_rules_small_mesh():
+    """Verify the logical->mesh mapping rules without building a mesh, via a
+    stub mesh object."""
+    from repro.distributed.sharding import ShardingRules, spec_for_param
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    rules = ShardingRules(tensor_axis="model", fsdp_axis="data",
+                          batch_axes=("data",))
+    mesh = FakeMesh()
+
+    # embedding (vocab, embed) -> (model, data)
+    sp = spec_for_param(mesh, rules, ParamSpec((128, 64), ("vocab", "embed")))
+    assert tuple(sp) == ("model", "data")
+    # attention wq (embed, ff) -> (data, model)
+    sp = spec_for_param(mesh, rules, ParamSpec((64, 128), ("embed", "ff")))
+    assert tuple(sp) == ("data", "model")
+    # expert weights (expert, embed, ff): model used once (expert wins)
+    sp = spec_for_param(mesh, rules,
+                        ParamSpec((8, 64, 128), ("expert", "embed", "ff")))
+    assert tuple(sp) == ("model", "data", None)
+    # non-divisible dim falls back to replicated
+    sp = spec_for_param(mesh, rules, ParamSpec((63, 128), ("vocab", "ff")))
+    assert tuple(sp) == (None, "model")
+    # 1-D params replicated
+    sp = spec_for_param(mesh, rules, ParamSpec((64,), ("embed",)))
+    assert tuple(sp) == ()
+    # stacked layer axis never sharded
+    sp = spec_for_param(mesh, rules,
+                        ParamSpec((4, 64, 128), ("layer", "embed", "ff")))
+    assert tuple(sp) == (None, "data", "model")
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax
+    from repro.configs.catalog import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_host_mesh
+    from repro.distributed import sharding as sh
+
+    cfg = get_config("{arch}").reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    shape = ShapeSpec("t", seq_len=16, global_batch=8, kind="{kind}")
+    mesh = make_host_mesh(data=4, model=2)
+    rules = sh.rules_for_mesh(mesh)
+    lowered, meta = lower_cell(cfg, shape, mesh, rules)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    print("RESULT " + json.dumps({{"flops": float(cost["flops"]),
+                                   "kind": meta["kind"]}}))
+""")
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("llama3.2-1b", "train"),
+    ("olmoe-1b-7b", "train"),
+    ("mamba2-130m", "decode"),
+    ("zamba2-2.7b", "prefill"),
+    ("whisper-large-v3", "decode"),
+    ("llama-3.2-vision-11b", "train"),
+])
+def test_mini_dryrun_compiles_on_8dev_mesh(arch, kind):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROC.format(arch=arch, kind=kind)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    rec = json.loads(line[len("RESULT "):])
+    assert rec["flops"] > 0
+    assert rec["kind"] == kind

@@ -1,0 +1,173 @@
+"""Substrate tests: data determinism, checkpoint roundtrip/corruption/elastic,
+optimizer behaviour, gradient compression invariants."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, TokenPipeline
+from repro.optim import AdamW, global_norm, warmup_cosine
+from repro.optim import compression as comp
+
+
+# -- data -------------------------------------------------------------------
+
+def test_pipeline_deterministic_by_step():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4, seed=7)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    for step in (0, 3, 1000):
+        b1, b2 = p1.batch(step), p2.batch(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    p = TokenPipeline(DataConfig(vocab_size=512, seq_len=16, global_batch=2))
+    b = p.batch(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 10**6), seed=st.integers(0, 100))
+def test_property_pipeline_tokens_in_vocab(step, seed):
+    p = TokenPipeline(DataConfig(vocab_size=97, seq_len=8, global_batch=2,
+                                 seed=seed))
+    b = p.batch(step)
+    assert (np.asarray(b["tokens"]) >= 0).all()
+    assert (np.asarray(b["tokens"]) < 97).all()
+
+
+def test_pipeline_file_source(tmp_path):
+    path = os.path.join(tmp_path, "toks.bin")
+    np.arange(10000, dtype=np.int32).tofile(path)
+    p = TokenPipeline(DataConfig(vocab_size=50000, seq_len=16, global_batch=2,
+                                 source="file", path=path))
+    b = p.batch(0)
+    assert b["tokens"].shape == (2, 16)
+    # contiguity: labels are the next token in file order
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# -- checkpoint --------------------------------------------------------------
+
+def _state():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.int32(5)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state()
+    ck.save(5, state)
+    assert ck.latest_step() == 5
+    restored = ck.restore(5, jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        state, restored)
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state()
+    path = ck.save(1, state)
+    # flip bytes in one leaf
+    leaf = os.path.join(path, "params__w.npy")
+    arr = np.load(leaf)
+    arr[0, 0] += 1
+    np.save(leaf, arr)
+    with pytest.raises(IOError, match="corruption"):
+        ck.restore(1, state)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state())
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_atomic_tmp_invisible(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state())
+    os.makedirs(os.path.join(tmp_path, "step_00000002.tmp"))
+    assert ck.latest_step() == 1
+
+
+# -- optimizer ---------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([[3.0, -2.0]])}
+    state = opt.init(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}   # d/dw of w^2
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_adamw_grad_clip():
+    opt = AdamW(learning_rate=0.0, grad_clip_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    _, _, metrics = opt.update({"w": jnp.full((4,), 100.0)}, state, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_warmup_cosine_shape():
+    sch = warmup_cosine(1.0, 10, 100)
+    assert float(sch(jnp.int32(0))) == 0.0
+    assert float(sch(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(sch(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_master_weights_bf16_params():
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    opt = AdamW(learning_rate=1e-4, weight_decay=0.0)
+    state = opt.init(params)
+    assert state.master["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((8, 8), 1e-3, jnp.bfloat16)}
+    new_params, state, _ = opt.update(grads, state, params)
+    assert new_params["w"].dtype == jnp.bfloat16
+    # master moved even though bf16 param may round
+    assert float(jnp.abs(state.master["w"] - 1.0).max()) > 0
+
+
+# -- gradient compression ----------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_compression_error_feedback_bounded(seed):
+    """deq + residual == original grad + previous residual (lossless split)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (32,))
+    state = comp.init_state({"g": g})
+    deq, new_state = comp.compress_grads({"g": g}, state)
+    recon = np.asarray(deq["g"]) + np.asarray(new_state.residual["g"])
+    np.testing.assert_allclose(recon, np.asarray(g), rtol=1e-6, atol=1e-6)
+    # int8 quantization error bounded by scale
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.abs(deq["g"] - g).max()) <= scale * 0.5 + 1e-7
+
+
+def test_compression_converges_over_steps():
+    """Error feedback: averaged compressed grads -> true grad over steps."""
+    g = jnp.array([1e-4, 5e-3, -2e-3, 1.0])  # tiny components would vanish
+    state = comp.init_state({"g": g})
+    total = np.zeros(4)
+    n = 50
+    for _ in range(n):
+        deq, state = comp.compress_grads({"g": g}, state)
+        total += np.asarray(deq["g"])
+    # error-feedback convergence bound: |avg - g| <= quant_scale / n
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    np.testing.assert_allclose(total / n, np.asarray(g),
+                               rtol=0.02, atol=2 * scale / n + 1e-7)

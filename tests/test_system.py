@@ -1,0 +1,141 @@
+"""End-to-end system behaviour: training convergence, checkpoint-restart
+bitwise continuation, serving consistency, grad-accum equivalence."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs.catalog import ARCHITECTURES
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.serve import Engine, ServeConfig
+from repro.train import (Trainer, TrainerConfig, init_train_state,
+                         make_train_step)
+
+
+def _tiny_setup(arch="llama3.2-1b", lr=3e-3, **cfg_overrides):
+    cfg = ARCHITECTURES[arch].reduced()
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    model = build_model(cfg)
+    opt = AdamW(learning_rate=lr)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8))
+    return cfg, model, opt, pipe
+
+
+def test_training_loss_decreases():
+    cfg, model, opt, pipe = _tiny_setup()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    losses = []
+    for i in range(40):
+        state, m = step(state, pipe(i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+
+def test_checkpoint_restart_bitwise_identical(tmp_path):
+    """Fault-tolerance core property: kill at step 10, restore, continue to
+    20 -> identical params as the uninterrupted run (deterministic data)."""
+    cfg, model, opt, pipe = _tiny_setup()
+    step = jax.jit(make_train_step(model, opt))
+
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    for i in range(10):
+        state, _ = step(state, pipe(i))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(10, state)
+    for i in range(10, 20):
+        state, _ = step(state, pipe(i))
+    uninterrupted = state
+
+    # simulated failure + restart
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), uninterrupted)
+    restored = ck.restore(10, template)
+    for i in range(10, 20):
+        restored, _ = step(restored, pipe(i))
+
+    flat_a = jax.tree_util.tree_leaves(uninterrupted.params)
+    flat_b = jax.tree_util.tree_leaves(restored.params)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_accumulation_equivalent():
+    """microbatches=4 must match a single full-batch step (within f32 eps)."""
+    cfg, model, opt, pipe = _tiny_setup(lr=1e-3)
+    batch = pipe(0)
+    s1 = init_train_state(model, opt, jax.random.PRNGKey(0))
+    s2 = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step1 = jax.jit(make_train_step(model, opt, microbatches=1))
+    step4 = jax.jit(make_train_step(model, opt, microbatches=4))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step4(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_compression_training_still_converges():
+    cfg, model, opt, pipe = _tiny_setup()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0),
+                             use_compression=True)
+    step = jax.jit(make_train_step(model, opt, use_compression=True),
+                   donate_argnums=(0,))
+    losses = []
+    for i in range(40):
+        state, m = step(state, pipe(i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.4
+
+
+def test_trainer_loop_with_checkpointing(tmp_path):
+    cfg, model, opt, pipe = _tiny_setup()
+    tcfg = TrainerConfig(total_steps=6, log_every=2, checkpoint_every=3)
+    trainer = Trainer(model, opt, pipe, tcfg,
+                      checkpointer=Checkpointer(str(tmp_path)))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    state, history = trainer.run(state)
+    assert int(state.step) == 6
+    assert len(history) == 3
+    assert trainer.checkpointer.latest_step() == 6
+
+
+def test_serving_matches_forward_argmax():
+    """Engine greedy generation == argmax over teacher-forced forward."""
+    cfg, model, opt, _ = _tiny_setup()
+    params = model.init(jax.random.PRNGKey(1))
+    eng = Engine(model, params, ServeConfig(max_batch=2, max_len=64))
+    prompts = [[5, 9, 2, 7], [1, 3, 3, 7]]
+    outs = eng.generate(prompts, max_new_tokens=5)
+    # replay: teacher-forced forward over prompt+generated must re-produce
+    # each generated token as the argmax at its position
+    for p, o in zip(prompts, outs):
+        seq = p + o
+        logits, _ = model.forward(
+            params, {"tokens": jnp.asarray([seq], jnp.int32)})
+        for j in range(len(o)):
+            pos = len(p) - 1 + j
+            assert int(jnp.argmax(logits[0, pos])) == seq[len(p) + j]
+
+
+def test_serving_ssm_family():
+    cfg, model, opt, _ = _tiny_setup(arch="mamba2-130m")
+    params = model.init(jax.random.PRNGKey(1))
+    eng = Engine(model, params, ServeConfig(max_batch=2, max_len=64))
+    outs = eng.generate([[5, 9, 2], [1, 3, 3]], max_new_tokens=4)
+    assert all(len(o) == 4 for o in outs)
+    seq = [5, 9, 2] + outs[0]
+    logits, _ = model.forward(params, {"tokens": jnp.asarray([seq], jnp.int32)})
+    assert int(jnp.argmax(logits[0, 2])) == outs[0][0]
