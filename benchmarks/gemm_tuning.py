@@ -5,36 +5,62 @@ Reproduces the paper's tuning methodology:
   * sweep tile size (paper: powers of two; here the VMEM-feasible
     (bm, bk, bn) space, plus the paper-faithful square-T subsweep),
   * keep the best-of-repeats timing per candidate (paper §2.3),
-  * report the optimum per (backend, dtype) — the Tab. 4 analogue.
+  * report the optimum per (backend, dtype) — the Tab. 4 analogue —
+    and the guided search's evaluated/total fraction (autotuner v2).
 
 Backends: tpu-v5e (analytic cost model — the TARGET hardware, this container
 is CPU-only), host measured XLA, host measured pallas-interpret (small N).
+
+``run(smoke=True)`` shrinks every problem so the whole suite finishes in
+seconds — the CI fast tier runs it and uploads the JSON as the repo's
+benchmark trajectory artifact.
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import (HOST_CPU, INTERPRET_SPACE, TPU_V5E, TuningSpace,
-                        sweep_gemm)
+from repro.core import (HOST_CPU, INTERPRET_SPACE, SEARCH_EXHAUSTIVE,
+                        SEARCH_GUIDED, TPU_V5E, sweep_gemm)
 from repro.core.tile_config import square
 from repro.core.cost_model import gemm_cost
 
 N_PAPER = 10240        # paper's tuning size
 N_CONTROL = 7168       # paper's control size
+N_SMOKE = 512          # CI smoke size
 
 
-def tune_tpu_model(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[str]:
+def tune_tpu_model(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[tuple]:
     """Figs. 3/4 analogue on the target hardware via the cost model."""
     rows = []
-    res = sweep_gemm(n, n, n, dtype=dtype, mode="model", hardware=TPU_V5E)
+    res = sweep_gemm(n, n, n, dtype=dtype, mode="model",
+                     search=SEARCH_EXHAUSTIVE, hardware=TPU_V5E, record=False)
     for p in sorted(res.points, key=lambda p: p.seconds):
         rows.append((f"gemm_tune/tpu-v5e/{jnp.dtype(dtype).name}/N{n}/"
                      f"{p.config.label}", p.seconds * 1e6, p.gflops))
     return rows
+
+
+def guided_vs_exhaustive(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[tuple]:
+    """Autotuner v2 headline: guided search evaluates a fraction of the space
+    and its winner is checked against the exhaustive sweep's.
+
+    derived = evaluated/total fraction; the name records whether the guided
+    winner matched (winner-match) or how far off it landed (regression
+    ratio), so the CI trajectory catches ranking drift.
+    """
+    kw = dict(dtype=dtype, mode="model", hardware=TPU_V5E, record=False)
+    guided = sweep_gemm(n, n, n, search=SEARCH_GUIDED, **kw)
+    full = sweep_gemm(n, n, n, search=SEARCH_EXHAUSTIVE, **kw)
+    frac = guided.evaluated / max(guided.candidates_total, 1)
+    if guided.best.config == full.best.config:
+        verdict = "winner-match"
+    else:
+        verdict = f"winner-off-{guided.best.seconds / full.best.seconds:.3f}x"
+    return [(f"gemm_tune_guided/tpu-v5e/N{n}/"
+             f"eval{guided.evaluated}of{guided.candidates_total}/{verdict}",
+             guided.best.seconds * 1e6, frac)]
 
 
 def tune_square_paper_faithful(n: int = N_PAPER, dtype=jnp.bfloat16):
@@ -50,11 +76,11 @@ def tune_square_paper_faithful(n: int = N_PAPER, dtype=jnp.bfloat16):
     return rows
 
 
-def tune_host_measured(n: int = 256, dtype=jnp.float32):
+def tune_host_measured(n: int = 256, dtype=jnp.float32, repeats: int = 2):
     """Measured wall-clock sweep on this host (pallas-interpret, small N)."""
     res = sweep_gemm(n, n, n, dtype=dtype, mode="measure",
                      space=INTERPRET_SPACE, hardware=HOST_CPU,
-                     backend="pallas-interpret", repeats=2, record=False)
+                     backend="pallas-interpret", repeats=repeats, record=False)
     rows = []
     for p in sorted(res.points, key=lambda p: p.seconds)[:5]:
         rows.append((f"gemm_tune/host-interpret/N{n}/{p.config.label}",
@@ -62,22 +88,30 @@ def tune_host_measured(n: int = 256, dtype=jnp.float32):
     return rows
 
 
-def tab4_optima():
+def tab4_optima(sizes=(N_PAPER, N_CONTROL)):
     """Tab. 4 analogue: per-(hardware, dtype, N) optimum tile."""
     rows = []
     for dtype in (jnp.bfloat16, jnp.float32):
-        for n in (N_PAPER, N_CONTROL):
+        for n in sizes:
             res = sweep_gemm(n, n, n, dtype=dtype, mode="model",
-                             hardware=TPU_V5E)
+                             hardware=TPU_V5E, record=False)
             b = res.best
             rows.append((f"tab4/tpu-v5e/{jnp.dtype(dtype).name}/N{n}/"
                          f"best={b.config.label}", b.seconds * 1e6, b.gflops))
     return rows
 
 
-def run() -> List[tuple]:
+def run(smoke: bool = False) -> List[tuple]:
     rows = []
+    if smoke:
+        rows += tune_tpu_model(N_SMOKE)[:6]
+        rows += guided_vs_exhaustive(N_SMOKE)
+        rows += tune_square_paper_faithful(N_SMOKE)
+        rows += tune_host_measured(64, repeats=1)
+        rows += tab4_optima(sizes=(N_SMOKE,))
+        return rows
     rows += tune_tpu_model()[:6]
+    rows += guided_vs_exhaustive()
     rows += tune_square_paper_faithful()
     rows += tune_host_measured()
     rows += tab4_optima()

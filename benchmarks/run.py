@@ -3,11 +3,20 @@
 Prints ``name,us_per_call,derived`` CSV (derived = GFLOPs/s, fraction of
 peak, tokens/s, or model-ratio depending on the bench).
 
-  PYTHONPATH=src python -m benchmarks.run                # all
-  PYTHONPATH=src python -m benchmarks.run gemm_tuning    # one suite
+  PYTHONPATH=src python -m benchmarks.run                      # all
+  PYTHONPATH=src python -m benchmarks.run gemm_tuning          # one suite
+  PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_gemm_tuning.json gemm_tuning
+
+``--smoke`` asks suites that support it (via a ``run(smoke=True)`` parameter)
+for a tiny-space variant suitable for CI; ``--json`` additionally writes the
+rows as a machine-readable ``BENCH_*.json`` trajectory point (uploaded as a
+workflow artifact by the fast CI tier).
 """
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
 import sys
 import traceback
 
@@ -15,18 +24,48 @@ SUITES = ["gemm_tuning", "gemm_scaling", "relative_peak", "ratio_model",
           "model_step", "roofline_summary"]
 
 
-def main() -> None:
-    wanted = sys.argv[1:] or SUITES
+def _run_suite(suite: str, smoke: bool):
+    mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
+    kwargs = {}
+    if smoke and "smoke" in inspect.signature(mod.run).parameters:
+        kwargs["smoke"] = True
+    return list(mod.run(**kwargs))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("suites", nargs="*", default=None,
+                    help=f"suites to run (default: all of {SUITES})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes for CI smoke runs")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write rows to this JSON file")
+    args = ap.parse_args(argv)
+
+    wanted = args.suites or SUITES
+    all_rows = []
+    failed = 0
     print("name,us_per_call,derived")
     for suite in wanted:
         try:
-            mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
-            for name, us, derived in mod.run():
+            for name, us, derived in _run_suite(suite, args.smoke):
                 print(f"{name},{us:.2f},{derived:.4g}", flush=True)
+                all_rows.append({"name": name, "us_per_call": us,
+                                 "derived": derived})
         except Exception as e:  # keep the harness running across suites
             traceback.print_exc()
             print(f"{suite}/ERROR,0,0  # {type(e).__name__}: {e}", flush=True)
+            failed += 1
+
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump({"smoke": args.smoke, "suites": wanted,
+                       "rows": all_rows}, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {len(all_rows)} rows -> {args.json_path}",
+              file=sys.stderr)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Tiered test gate with a ratchet against the committed baseline.
+
+    python scripts/ci_ratchet.py --tier fast            # tests minus slow
+    python scripts/ci_ratchet.py --tier full            # everything
+    python scripts/ci_ratchet.py --tier full --update-baseline
+
+Runs pytest (``--continue-on-collection-errors`` so a broken module never
+hides the rest of the suite), parses the JUnit XML, and compares the counts
+against ``tests/baseline_status.json``:
+
+* collection/runtime **errors** may not exceed the baseline,
+* **failed** may not exceed the baseline (pre-existing failures tolerated,
+  new ones fatal),
+* **passed** may not drop below the baseline (tests can't silently vanish).
+
+Improvements don't fail the gate — they print a reminder to ratchet the
+baseline forward with ``--update-baseline`` so the better state becomes the
+new floor.  The seed state (50 passed / 18 failed / 1 skipped, 4 collection
+errors) is kept in the file for provenance.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import xml.etree.ElementTree as ET
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "tests", "baseline_status.json")
+
+TIERS = {
+    "fast": ["-m", "not slow"],
+    "full": [],
+}
+
+
+def run_pytest(tier: str, extra):
+    xml_path = os.path.join(tempfile.mkdtemp(prefix="ratchet-"), "junit.xml")
+    cmd = [sys.executable, "-m", "pytest", "-q", "--tb=line",
+           "--continue-on-collection-errors", f"--junit-xml={xml_path}"]
+    cmd += TIERS[tier] + list(extra)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    print(f"[ratchet] running: {' '.join(cmd)}", flush=True)
+    proc = subprocess.run(cmd, cwd=REPO, env=env)
+    if not os.path.exists(xml_path):
+        print("[ratchet] FATAL: pytest produced no junit xml "
+              f"(exit {proc.returncode})")
+        sys.exit(2)
+    return parse_junit(xml_path)
+
+
+def parse_junit(path: str) -> dict:
+    root = ET.parse(path).getroot()
+    suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
+    counts = {"tests": 0, "failed": 0, "errors": 0, "skipped": 0}
+    for s in suites:
+        counts["tests"] += int(s.get("tests", 0))
+        counts["failed"] += int(s.get("failures", 0))
+        counts["errors"] += int(s.get("errors", 0))
+        counts["skipped"] += int(s.get("skipped", 0))
+    counts["passed"] = (counts["tests"] - counts["failed"]
+                        - counts["errors"] - counts["skipped"])
+    return counts
+
+
+def load_baseline() -> dict:
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tier", choices=sorted(TIERS), required=True)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="record the observed counts as the new floor")
+    ap.add_argument("extra", nargs="*", help="extra pytest args")
+    args = ap.parse_args(argv)
+
+    counts = run_pytest(args.tier, args.extra)
+    print(f"[ratchet] observed ({args.tier}): {counts}")
+
+    blob = load_baseline()
+    if args.update_baseline:
+        blob.setdefault("tiers", {})[args.tier] = {
+            k: counts[k] for k in ("passed", "failed", "errors", "skipped")}
+        with open(BASELINE, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[ratchet] baseline[{args.tier}] updated -> {BASELINE}")
+        return 0
+
+    base = blob.get("tiers", {}).get(args.tier)
+    if base is None:
+        print(f"[ratchet] no baseline for tier {args.tier!r}; "
+              f"run with --update-baseline first")
+        return 2
+
+    problems = []
+    if counts["errors"] > base["errors"]:
+        problems.append(f"errors {counts['errors']} > baseline {base['errors']}")
+    if counts["failed"] > base["failed"]:
+        problems.append(f"failed {counts['failed']} > baseline {base['failed']}")
+    if counts["passed"] < base["passed"]:
+        problems.append(f"passed {counts['passed']} < baseline {base['passed']}")
+
+    if problems:
+        print(f"[ratchet] REGRESSION vs baseline {base}:")
+        for p in problems:
+            print(f"[ratchet]   - {p}")
+        return 1
+
+    improved = (counts["failed"] < base["failed"]
+                or counts["errors"] < base["errors"]
+                or counts["passed"] > base["passed"])
+    if improved:
+        print(f"[ratchet] improved vs baseline {base} — consider "
+              f"`python scripts/ci_ratchet.py --tier {args.tier} "
+              f"--update-baseline` to ratchet the floor forward")
+    else:
+        print(f"[ratchet] matches baseline {base}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,198 @@
+#!/usr/bin/env python
+"""Autotuning CLI: produce, inspect, and ship the tuning database.
+
+    python scripts/tune.py sweep  --hardware tpu-v5e --mode model
+    python scripts/tune.py sweep  --hardware host-cpu --mode measure --shapes 64x64x64
+    python scripts/tune.py show   --hardware tpu-v5e
+    python scripts/tune.py diff   --hardware tpu-v5e
+    python scripts/tune.py export --hardware tpu-v5e --format markdown
+
+``sweep`` writes/updates ``tuned/<hardware>.json`` (the committed paper-Tab.-4
+artifact that serve/train/matmul auto-load); ``show``/``export`` render it as
+a markdown table; ``diff`` re-runs a model-mode sweep over the DB's problems
+and reports entries whose winner changed (e.g. after a cost-model edit).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import tuner, tuning_db  # noqa: E402
+from repro.core.hardware import get_hardware  # noqa: E402
+from repro.core.tile_config import INTERPRET_SPACE  # noqa: E402
+
+# Default problem set: the paper's tuning/control sizes plus the GEMM shapes a
+# transformer block actually issues at serving/training scale (batchxseq rows,
+# attention + MLP widths) — enough coverage that nearest-shape fallback has
+# sensible neighbours for real model traffic.
+DEFAULT_SHAPES = [
+    (10240, 10240, 10240),   # paper tuning size
+    (7168, 7168, 7168),      # paper control size
+    (4096, 4096, 4096),
+    (2048, 2048, 2048),
+    (1024, 1024, 1024),
+    (4096, 4096, 14336),     # MLP up-projection
+    (4096, 14336, 4096),     # MLP down-projection
+    (512, 4096, 4096),       # short-batch decode rows
+    (8192, 4096, 4096),      # long-prefill rows
+]
+DTYPES = {"bfloat16": jnp.bfloat16, "bf16": jnp.bfloat16,
+          "float32": jnp.float32, "f32": jnp.float32}
+
+
+def _parse_shapes(text):
+    shapes = []
+    for part in text.split(","):
+        try:
+            m, k, n = (int(x) for x in part.lower().split("x"))
+        except ValueError:
+            raise SystemExit(
+                f"error: bad --shapes entry {part!r}; expected MxKxN "
+                f"(e.g. 4096x4096x4096)")
+        shapes.append((m, k, n))
+    return shapes
+
+
+def _db_path(args) -> str:
+    return tuning_db.db_path(args.hardware, args.db_dir)
+
+
+def cmd_sweep(args) -> int:
+    hw = get_hardware(args.hardware)
+    shapes = _parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    dtypes = [args.dtype] if args.dtype else ["bfloat16", "float32"]
+    space = INTERPRET_SPACE if args.mode == "measure" else None
+    if args.mode == "measure":
+        # wall-clock sweeps need host-sized problems unless overridden
+        if not args.shapes:
+            shapes = [(64, 64, 64), (128, 128, 128), (256, 256, 256)]
+
+    path = _db_path(args)
+    db = tuning_db.TuningDB(hw.name)
+    if os.path.exists(path) and not args.fresh:
+        db.merge(tuning_db.TuningDB.from_file(path))
+
+    results = []
+    for dt_name in dtypes:
+        dtype = DTYPES[dt_name]
+        for (m, k, n) in shapes:
+            res = tuner.sweep_gemm(
+                m, k, n, dtype=dtype, hardware=hw, mode=args.mode,
+                search=args.search, top_k=args.top_k, space=space,
+                repeats=args.repeats, record=False)
+            results.append(res)
+            b = res.best
+            print(f"[sweep] {hw.name} {res.dtype:8s} {m}x{k}x{n}: "
+                  f"best {b.config.label} ({b.gflops:.0f} GFLOP/s, "
+                  f"{res.evaluated}/{res.candidates_total} evaluated, "
+                  f"{res.pruned} pruned, {res.search})")
+    db.merge(tuning_db.db_from_sweeps(hw.name, results))
+    db.save(path)
+    print(f"[sweep] wrote {len(db)} entries -> {path}")
+    return 0
+
+
+def _load_db(args) -> tuning_db.TuningDB:
+    path = _db_path(args)
+    if not os.path.exists(path):
+        raise SystemExit(f"error: no tuning DB at {path}; "
+                         f"run `tune.py sweep --hardware {args.hardware}` first")
+    return tuning_db.TuningDB.from_file(path)
+
+
+def cmd_show(args) -> int:
+    print(_load_db(args).markdown())
+    return 0
+
+
+def cmd_diff(args) -> int:
+    """Re-sweep the DB's problems in model mode; report changed winners."""
+    path = _db_path(args)
+    db = _load_db(args)
+    hw = get_hardware(args.hardware)
+    changed = 0
+    for rec in db.records():
+        if rec.source != "model":
+            continue  # measured entries are ground truth; don't second-guess
+        res = tuner.sweep_gemm(rec.m, rec.k, rec.n, dtype=DTYPES[rec.dtype],
+                               hardware=hw, mode="model", search=args.search,
+                               top_k=args.top_k, record=False)
+        new = res.best.config
+        if new != rec.config:
+            changed += 1
+            print(f"[diff] {rec.dtype} {rec.m}x{rec.k}x{rec.n}: "
+                  f"{rec.config.label} -> {new.label}")
+    print(f"[diff] {changed} of {len(db)} entries changed vs {path}")
+    return 1 if changed and args.check else 0
+
+
+def cmd_export(args) -> int:
+    db = _load_db(args)
+    if args.format == "markdown":
+        text = db.markdown() + "\n"
+    else:
+        import json
+        text = json.dumps(db.to_json(), indent=1, sort_keys=True) + "\n"
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"[export] wrote {args.out}")
+    else:
+        print(text, end="")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p):
+        p.add_argument("--hardware", required=True)
+        p.add_argument("--db-dir", default=None,
+                       help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
+
+    p = sub.add_parser("sweep", help="tune problems and update the DB")
+    common(p)
+    p.add_argument("--mode", choices=["model", "measure"], default="model")
+    p.add_argument("--search", choices=[tuner.SEARCH_GUIDED,
+                                        tuner.SEARCH_EXHAUSTIVE],
+                   default=tuner.SEARCH_GUIDED)
+    p.add_argument("--top-k", type=int, default=tuner.DEFAULT_TOP_K)
+    p.add_argument("--shapes", default=None, help="comma list of MxKxN")
+    p.add_argument("--dtype", choices=sorted(DTYPES), default=None)
+    p.add_argument("--repeats", type=int, default=3)
+    p.add_argument("--fresh", action="store_true",
+                   help="discard existing DB entries instead of merging")
+    p.set_defaults(fn=cmd_sweep)
+
+    p = sub.add_parser("show", help="print the DB as a markdown table")
+    common(p)
+    p.set_defaults(fn=cmd_show)
+
+    p = sub.add_parser("diff", help="re-sweep and report changed winners")
+    common(p)
+    p.add_argument("--search", default=tuner.SEARCH_GUIDED)
+    p.add_argument("--top-k", type=int, default=tuner.DEFAULT_TOP_K)
+    p.add_argument("--check", action="store_true",
+                   help="exit nonzero when winners changed (CI drift gate)")
+    p.set_defaults(fn=cmd_diff)
+
+    p = sub.add_parser("export", help="export the DB (markdown/json)")
+    common(p)
+    p.add_argument("--format", choices=["markdown", "json"], default="markdown")
+    p.add_argument("--out", default=None)
+    p.set_defaults(fn=cmd_export)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

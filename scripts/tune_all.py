@@ -1,17 +1,19 @@
-"""Generate the production tuned-tile table (paper Tab. 4 analogue) for every
-GEMM shape the full-size models actually issue, via abstract tracing +
-cost-model sweeps.  Output: results/tuned_tiles.json (loadable by
-TileRegistry at launch)."""
+"""Generate the production tuning DB (paper Tab. 4 analogue) for every GEMM
+shape the full-size models actually issue, via abstract tracing + guided
+cost-model sweeps.  Output: tuned/tpu-v5e.json (auto-loaded by matmul and the
+serve/train launchers; see scripts/tune.py for the general CLI)."""
+import os
 import sys
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.catalog import ARCHITECTURES
-from repro.core import TileRegistry, capture_gemm_shapes, tune_model_gemms
+from repro.core import capture_gemm_shapes, sweep_shapes, tuning_db
 from repro.models import build_model
 
-registry = TileRegistry()
 all_shapes = set()
 for name, cfg in ARCHITECTURES.items():
     model = build_model(cfg)
@@ -25,8 +27,13 @@ for name, cfg in ARCHITECTURES.items():
     all_shapes.update(uniq)
     print(f"{name:26s} {len(shapes):3d} GEMMs, {len(uniq):2d} unique shapes")
 
-print(f"tuning {len(all_shapes)} unique shapes (cost model, tpu-v5e, bf16)...")
-tuned = tune_model_gemms(sorted(all_shapes), dtype=jnp.bfloat16,
-                         registry=registry)
-registry.save("results/tuned_tiles.json")
-print(f"wrote results/tuned_tiles.json with {len(registry.entries())} entries")
+print(f"tuning {len(all_shapes)} unique shapes (guided, tpu-v5e, bf16)...")
+results = sweep_shapes(sorted(all_shapes), dtype=jnp.bfloat16, record=False)
+
+path = tuning_db.db_path("tpu-v5e")
+db = tuning_db.TuningDB("tpu-v5e")
+if os.path.exists(path):
+    db.merge(tuning_db.TuningDB.from_file(path))
+db.merge(tuning_db.db_from_sweeps("tpu-v5e", results))
+db.save(path)
+print(f"wrote {path} with {len(db)} entries")

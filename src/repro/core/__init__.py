@@ -3,6 +3,14 @@ from repro.core.gemm_api import (  # noqa: F401
     ExecutionContext, capture_gemm_shapes, einsum, execution_context, matmul,
 )
 from repro.core.hardware import HARDWARE, HOST_CPU, TPU_V5E, get_hardware  # noqa: F401
-from repro.core.registry import GLOBAL_REGISTRY, TileRegistry, get_tile_config  # noqa: F401
+from repro.core.registry import (  # noqa: F401
+    GLOBAL_REGISTRY, LookupResult, TileRegistry, get_tile_config,
+)
 from repro.core.tile_config import INTERPRET_SPACE, TileConfig, TuningSpace, square  # noqa: F401
-from repro.core.tuner import SweepResult, sweep_gemm, tune_model_gemms  # noqa: F401
+from repro.core.tuner import (  # noqa: F401
+    SEARCH_EXHAUSTIVE, SEARCH_GUIDED, SweepResult, sweep_gemm, sweep_shapes,
+    tune_model_gemms,
+)
+from repro.core.tuning_db import (  # noqa: F401
+    TuningDB, TuningDBError, TuningRecord, db_from_sweeps, load_all,
+)

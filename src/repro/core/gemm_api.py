@@ -127,7 +127,10 @@ def matmul(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
 
     config = None
     if backend in (ops.BACKEND_PALLAS_TPU, ops.BACKEND_PALLAS_INTERPRET):
-        config = GLOBAL_REGISTRY.get(ctx.hardware, x.dtype, m, k, n)
+        # First lookup lazily pulls committed tuned/<hardware>.json DBs into
+        # the global registry, so a fresh process serves tuned tiles with no
+        # explicit setup; untuned shapes resolve via nearest-shape fallback.
+        config = GLOBAL_REGISTRY.lookup(ctx.hardware, x.dtype, m, k, n).config
 
     if (ctx.bf16_partials and backend == ops.BACKEND_XLA
             and bias is None and activation is None

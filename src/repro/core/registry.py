@@ -1,19 +1,34 @@
-"""Per-architecture optimal-parameter registry — Alpaka Listing 1.1 in JAX.
+"""Tuned-parameter lookup: the runtime face of the tuning database.
 
-The paper stores the tuned tile size in a trait specialized per accelerator::
+The paper stores its tuned tile size in a C++ trait specialized per
+accelerator (Listing 1.1); here the same role is played by a thread-safe
+registry keyed by (hardware, dtype) with per-problem-shape tuned entries.
+Kernel/model code only ever asks :func:`get_tile_config` (via
+``gemm_api.matmul``) — tuning never touches implementation code.
 
-    template<...> struct OptimalVectorSize<AccGpuCudaRt<...>> { ... GPU_ELEM_NUM ... };
-    template<...> struct OptimalVectorSize<AccCpuOmp2Blocks<...>> { ... OMP_ELEM_NUM ... };
+Resolution order for ``get(hardware, dtype, m, k, n)``:
 
-Here the same role is played by a runtime registry keyed by
-(backend/hardware, dtype) with optional per-problem-shape tuned overrides
-persisted to JSON (the tuner writes them; Tab. 4 of the paper is exactly
-such a table).  Model/kernel code only ever asks ``get_tile_config`` —
-tuning never touches implementation code.
+1. **exact**   — a tuned entry for this precise (m, k, n);
+2. **nearest** — the tuned entry for the closest shape (log-space distance
+   over the three dims, capped by ``NEAREST_MAX_LOG2_DIST``), so untuned
+   problems reuse a neighbour's tile instead of the static default;
+3. **generic** — a shape-agnostic tuned entry for (hardware, dtype);
+4. **default** — the built-in per-backend starting point (the paper's
+   ``#define GPU_ELEM_NUM`` analogue, its ~20%-of-peak baseline);
+5. **fallback** — 128x128x128.
+
+Persistence lives in :mod:`repro.core.tuning_db` (versioned
+``tuned/<hardware>.json`` files, the paper's Tab. 4 as committed artifacts);
+the process-global registry lazily loads every DB file at first lookup, so a
+fresh process — serving, training, or a bare ``matmul`` call — picks up
+committed tuning results automatically.  ``TileRegistry.save``/``load`` keep
+the legacy flat-JSON format for ad-hoc snapshots.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import math
 import os
 import threading
 from typing import Dict, Optional, Tuple
@@ -35,6 +50,10 @@ _DEFAULTS: Dict[Tuple[str, str], TileConfig] = {
 }
 _FALLBACK = TileConfig(128, 128, 128)
 
+#: nearest-shape matches beyond this cumulative |log2| distance are rejected
+#: (e.g. 6.0 allows a combined size ratio of 2**6 across the three dims).
+NEAREST_MAX_LOG2_DIST = 6.0
+
 
 def _key_str(hardware: str, dtype, m=None, k=None, n=None) -> str:
     dt = jnp.dtype(dtype).name
@@ -43,44 +62,131 @@ def _key_str(hardware: str, dtype, m=None, k=None, n=None) -> str:
     return f"{hardware}/{dt}/{m}x{k}x{n}"
 
 
-class TileRegistry:
-    """Thread-safe tuned-parameter store with JSON persistence."""
+def _shape_dist(a: Tuple[int, int, int], b: Tuple[int, int, int]) -> float:
+    return sum(abs(math.log2(max(x, 1)) - math.log2(max(y, 1)))
+               for x, y in zip(a, b))
 
-    def __init__(self, path: Optional[str] = None):
+
+@dataclasses.dataclass(frozen=True)
+class LookupResult:
+    """A resolved tile config plus where it came from (for tests/telemetry)."""
+    config: TileConfig
+    source: str                                  # exact|nearest|generic|default|fallback
+    matched_shape: Optional[Tuple[int, int, int]] = None
+    distance: float = 0.0
+
+
+class TileRegistry:
+    """Thread-safe tuned-parameter store with nearest-shape fallback."""
+
+    def __init__(self, path: Optional[str] = None, *, autoload: bool = False):
         self._lock = threading.Lock()
-        self._tuned: Dict[str, TileConfig] = {}
+        self._autoload_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        # shape-specific entries: (hw, dtype, m, k, n) -> TileConfig
+        self._exact: Dict[Tuple[str, str, int, int, int], TileConfig] = {}
+        # shape-agnostic entries: (hw, dtype) -> TileConfig
+        self._generic: Dict[Tuple[str, str], TileConfig] = {}
         self._path = path
+        self._autoload = autoload
+        self._autoload_done = False
+        self.hit_stats: Dict[str, int] = {}
         if path and os.path.exists(path):
             self.load(path)
 
+    # -- auto-load of committed tuning DBs ------------------------------
+    def _ensure_autoloaded(self) -> None:
+        if not self._autoload or self._autoload_done:
+            return
+        # Concurrent first lookups block here until the load completes, so
+        # no thread ever resolves against a half-populated registry; the
+        # done flag is only set once the DBs are in.
+        with self._autoload_lock:
+            if self._autoload_done:
+                return
+            from repro.core import tuning_db  # deferred: tuning_db is standalone
+            tuning_db.load_all(self)
+            self._autoload_done = True
+
+    def mark_autoloaded(self) -> None:
+        """Disable the lazy default-dir load (an explicit load supersedes it)."""
+        self._autoload_done = True
+
     # -- lookup --------------------------------------------------------
+    def lookup(self, hardware: str, dtype, m: int = None, k: int = None,
+               n: int = None) -> LookupResult:
+        """Resolve a tile config, reporting which tier satisfied it."""
+        self._ensure_autoloaded()
+        dt = jnp.dtype(dtype).name
+        has_shape = m is not None and k is not None and n is not None
+        with self._lock:
+            if has_shape:
+                hit = self._exact.get((hardware, dt, m, k, n))
+                if hit is not None:
+                    res = LookupResult(hit, "exact", (m, k, n))
+                    return self._count(res)
+                near = self._nearest_locked(hardware, dt, (m, k, n))
+                if near is not None:
+                    return self._count(near)
+            hit = self._generic.get((hardware, dt))
+            if hit is not None:
+                return self._count(LookupResult(hit, "generic"))
+        cfg = _DEFAULTS.get((hardware, dt))
+        if cfg is not None:
+            return self._count(LookupResult(cfg, "default"))
+        return self._count(LookupResult(_FALLBACK, "fallback"))
+
+    def _nearest_locked(self, hardware: str, dt: str,
+                        shape: Tuple[int, int, int]) -> Optional[LookupResult]:
+        best = None
+        for (hw, d, m, k, n), cfg in self._exact.items():
+            if hw != hardware or d != dt:
+                continue
+            dist = _shape_dist(shape, (m, k, n))
+            if dist > NEAREST_MAX_LOG2_DIST:
+                continue
+            cand = (dist, (m, k, n), cfg)
+            if best is None or cand[:2] < best[:2]:  # distance, then shape
+                best = cand
+        if best is None:
+            return None
+        dist, mshape, cfg = best
+        return LookupResult(cfg, "nearest", mshape, dist)
+
+    def _count(self, res: LookupResult) -> LookupResult:
+        # leaf-level lock of its own: callers may or may not hold self._lock
+        with self._stats_lock:
+            self.hit_stats[res.source] = self.hit_stats.get(res.source, 0) + 1
+        return res
+
     def get(self, hardware: str, dtype, m: int = None, k: int = None,
             n: int = None) -> TileConfig:
-        """Most-specific-first: tuned (hw, dtype, shape) -> tuned (hw, dtype)
-        -> built-in default -> fallback."""
-        with self._lock:
-            if m is not None:
-                hit = self._tuned.get(_key_str(hardware, dtype, m, k, n))
-                if hit is not None:
-                    return hit
-            hit = self._tuned.get(_key_str(hardware, dtype))
-            if hit is not None:
-                return hit
-        return _DEFAULTS.get((hardware, jnp.dtype(dtype).name), _FALLBACK)
+        return self.lookup(hardware, dtype, m, k, n).config
 
     # -- update --------------------------------------------------------
     def put(self, cfg: TileConfig, hardware: str, dtype, m: int = None,
             k: int = None, n: int = None) -> None:
+        dt = jnp.dtype(dtype).name
         with self._lock:
-            self._tuned[_key_str(hardware, dtype, m, k, n)] = cfg
+            if m is None or k is None or n is None:
+                # partial shapes are meaningless for nearest-distance math;
+                # anything short of a full (m, k, n) is a generic entry
+                self._generic[(hardware, dt)] = cfg
+            else:
+                self._exact[(hardware, dt, m, k, n)] = cfg
 
-    # -- persistence (Tab. 4 as a file) ---------------------------------
+    def clear(self) -> None:
+        with self._lock:
+            self._exact.clear()
+            self._generic.clear()
+            self.hit_stats.clear()
+
+    # -- persistence (legacy flat snapshot; tuning_db is the real store) -
     def save(self, path: Optional[str] = None) -> None:
         path = path or self._path
         if not path:
             raise ValueError("no path for registry save")
-        with self._lock:
-            blob = {k: [c.bm, c.bk, c.bn] for k, c in self._tuned.items()}
+        blob = {k: [c.bm, c.bk, c.bn] for k, c in self.entries().items()}
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(blob, f, indent=1, sort_keys=True)
@@ -90,16 +196,27 @@ class TileRegistry:
         with open(path) as f:
             blob = json.load(f)
         with self._lock:
-            for k, (bm, bk, bn) in blob.items():
-                self._tuned[k] = TileConfig(bm=bm, bk=bk, bn=bn)
+            for key, (bm, bk, bn) in blob.items():
+                parts = key.split("/")
+                cfg = TileConfig(bm=bm, bk=bk, bn=bn)
+                if len(parts) == 2:
+                    self._generic[(parts[0], parts[1])] = cfg
+                else:
+                    m, k, n = (int(x) for x in parts[2].split("x"))
+                    self._exact[(parts[0], parts[1], m, k, n)] = cfg
 
     def entries(self) -> Dict[str, TileConfig]:
         with self._lock:
-            return dict(self._tuned)
+            out = {_key_str(hw, dt): cfg
+                   for (hw, dt), cfg in self._generic.items()}
+            out.update({_key_str(hw, dt, m, k, n): cfg
+                        for (hw, dt, m, k, n), cfg in self._exact.items()})
+        return out
 
 
-# Process-global registry (models import this).
-GLOBAL_REGISTRY = TileRegistry()
+# Process-global registry (models import this); lazily pulls in every
+# committed tuned/<hardware>.json at first lookup.
+GLOBAL_REGISTRY = TileRegistry(autoload=True)
 
 
 def get_tile_config(hardware: str, dtype, m: int = None, k: int = None,

@@ -1,0 +1,256 @@
+"""Versioned, persistent tuning database — the paper's Tab. 4 as an artifact.
+
+The paper's central claim is that tuned parameters live *outside* the
+single-source kernel.  ``TuningDB`` is where they live between processes:
+one schema-checked JSON file per hardware target under ``tuned/<hardware>.json``
+(committed to the repo, like the paper's printed table), each entry recording
+the winning :class:`~repro.core.tile_config.TileConfig` for one
+(dtype, m, k, n) problem together with how it was obtained (``model`` cost
+estimate or wall-clock ``measure``) and the score that won.
+
+Producers: ``scripts/tune.py sweep`` and :func:`repro.core.tuner.sweep_gemm`.
+Consumers: :class:`repro.core.registry.TileRegistry` auto-loads every DB file
+at first lookup (so ``gemm_api.matmul`` picks tuned tiles up in any fresh
+process), and ``launch/serve.py`` / ``launch/train.py`` load it explicitly at
+startup and report what they found.
+
+Schema versioning: files carry ``schema_version``; :func:`TuningDB.from_file`
+raises :class:`TuningDBError` on a mismatch so a stale artifact can never be
+silently misread (auto-load downgrades that to a warning and skips the file).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import warnings
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.tile_config import TileConfig
+
+SCHEMA_VERSION = 2
+
+#: env var overriding where tuned DBs are read from / written to
+TUNED_DIR_ENV = "REPRO_TUNED_DIR"
+#: env var disabling registry auto-load entirely (set to any non-empty value)
+DISABLE_ENV = "REPRO_DISABLE_TUNED"
+
+
+class TuningDBError(ValueError):
+    """Raised for schema-version mismatches and malformed DB files."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningRecord:
+    """One tuned winner: problem identity + winning tile + provenance."""
+    dtype: str
+    m: int
+    k: int
+    n: int
+    bm: int
+    bk: int
+    bn: int
+    source: str = "model"        # "model" | "measure"
+    seconds: float = 0.0         # winning score (estimated or measured)
+    gflops: float = 0.0
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (self.m, self.k, self.n)
+
+    @property
+    def config(self) -> TileConfig:
+        return TileConfig(bm=self.bm, bk=self.bk, bn=self.bn)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, blob: dict) -> "TuningRecord":
+        try:
+            return cls(**{f.name: blob[f.name] for f in dataclasses.fields(cls)
+                          if f.name in blob})
+        except (KeyError, TypeError) as e:
+            raise TuningDBError(f"malformed tuning record {blob!r}: {e}") from e
+
+
+class TuningDB:
+    """All tuned winners for one hardware target, persistable as JSON."""
+
+    def __init__(self, hardware: str):
+        self.hardware = hardware
+        self._records: Dict[Tuple[str, int, int, int], TuningRecord] = {}
+
+    # -- content -------------------------------------------------------
+    #: wall-clock measurements outrank analytic estimates — their "seconds"
+    #: are not comparable, so source priority decides before score does.
+    _SOURCE_RANK = {"model": 0, "measure": 1, "measure-pruned": 1}
+
+    def add(self, rec: TuningRecord, *, keep_best: bool = True) -> None:
+        """Insert a record.  With ``keep_best``:
+
+        * a measured entry always beats a model estimate (their "seconds"
+          are not comparable);
+        * measured vs measured keeps the better score (best-of-runs);
+        * model vs model always takes the NEW record — model estimates are
+          recomputable, so the latest sweep (with the current cost model) is
+          authoritative; keeping a lower stale estimate would pin pre-fix
+          winners forever and make ``tune.py diff`` drift unrecoverable.
+        """
+        key = (rec.dtype, rec.m, rec.k, rec.n)
+        old = self._records.get(key)
+        if keep_best and old is not None:
+            new_rank = self._SOURCE_RANK.get(rec.source, 0)
+            old_rank = self._SOURCE_RANK.get(old.source, 0)
+            if new_rank < old_rank:
+                return
+            if (new_rank == old_rank and new_rank > 0
+                    and old.seconds > 0 and rec.seconds > old.seconds):
+                return
+        self._records[key] = rec
+
+    def records(self) -> List[TuningRecord]:
+        return [self._records[k] for k in sorted(self._records)]
+
+    def get(self, dtype: str, m: int, k: int, n: int) -> Optional[TuningRecord]:
+        return self._records.get((dtype, m, k, n))
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def merge(self, other: "TuningDB", *, keep_best: bool = True) -> None:
+        if other.hardware != self.hardware:
+            raise TuningDBError(
+                f"cannot merge DB for {other.hardware!r} into {self.hardware!r}")
+        for rec in other.records():
+            self.add(rec, keep_best=keep_best)
+
+    # -- persistence ---------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "hardware": self.hardware,
+            "entries": [r.to_json() for r in self.records()],
+        }
+
+    @classmethod
+    def from_json(cls, blob: dict) -> "TuningDB":
+        if not isinstance(blob, dict) or "schema_version" not in blob:
+            raise TuningDBError("not a tuning DB (missing schema_version)")
+        ver = blob["schema_version"]
+        if ver != SCHEMA_VERSION:
+            raise TuningDBError(
+                f"tuning DB schema_version {ver} != supported {SCHEMA_VERSION}; "
+                f"re-run `python scripts/tune.py sweep` to regenerate")
+        db = cls(blob.get("hardware", "unknown"))
+        for entry in blob.get("entries", []):
+            db.add(TuningRecord.from_json(entry), keep_best=False)
+        return db
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def from_file(cls, path: str) -> "TuningDB":
+        with open(path) as f:
+            try:
+                blob = json.load(f)
+            except json.JSONDecodeError as e:
+                raise TuningDBError(f"{path}: invalid JSON: {e}") from e
+        return cls.from_json(blob)
+
+    # -- reporting (the literal Tab. 4 rendering) ----------------------
+    def markdown(self) -> str:
+        lines = [
+            f"### Tuned tile table — `{self.hardware}` (paper Tab. 4 analogue)",
+            "",
+            "| dtype | m | k | n | best tile (bm x bk x bn) | source | est/meas time | GFLOP/s |",
+            "|---|---|---|---|---|---|---|---|",
+        ]
+        for r in self.records():
+            t = f"{r.seconds * 1e6:.1f} us" if r.seconds else "-"
+            gf = f"{r.gflops:.0f}" if r.gflops else "-"
+            lines.append(f"| {r.dtype} | {r.m} | {r.k} | {r.n} "
+                         f"| {r.bm}x{r.bk}x{r.bn} | {r.source} | {t} | {gf} |")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Location + registry wiring
+# ---------------------------------------------------------------------------
+
+def default_tuned_dir() -> str:
+    """``$REPRO_TUNED_DIR`` if set, else ``<repo-root>/tuned``.
+
+    The repo root is found by walking up from this file past ``src/``; when
+    the package is installed without the repo layout the path simply will not
+    exist and loaders no-op.
+    """
+    env = os.environ.get(TUNED_DIR_ENV)
+    if env:
+        return env
+    here = os.path.abspath(os.path.dirname(__file__))      # .../src/repro/core
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    return os.path.join(root, "tuned")
+
+
+def db_path(hardware: str, tuned_dir: Optional[str] = None) -> str:
+    return os.path.join(tuned_dir or default_tuned_dir(), f"{hardware}.json")
+
+
+def load_into_registry(registry, path: str, *, strict: bool = False) -> int:
+    """Load one DB file into a :class:`TileRegistry`; returns entries loaded."""
+    try:
+        db = TuningDB.from_file(path)
+    except (TuningDBError, OSError) as e:
+        if strict:
+            raise
+        warnings.warn(f"skipping tuning DB {path}: {e}", stacklevel=2)
+        return 0
+    for rec in db.records():
+        registry.put(rec.config, db.hardware, rec.dtype, rec.m, rec.k, rec.n)
+    return len(db)
+
+
+def load_all(registry, tuned_dir: Optional[str] = None, *,
+             strict: bool = False) -> Dict[str, int]:
+    """Load every ``<hardware>.json`` under the tuned dir into ``registry``.
+
+    Returns ``{path: entries_loaded}``; missing dir -> empty dict.  Called
+    lazily by the global registry at first lookup and eagerly by the
+    serve/train launchers.
+    """
+    d = tuned_dir or default_tuned_dir()
+    out: Dict[str, int] = {}
+    try:
+        if os.environ.get(DISABLE_ENV) or not os.path.isdir(d):
+            return out
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            out[path] = load_into_registry(registry, path, strict=strict)
+        return out
+    finally:
+        # An explicit load supersedes (and must not later be overwritten by)
+        # the registry's lazy default-dir autoload.  Marked only AFTER the
+        # entries are in, so a concurrent lookup's lock-free fast path can
+        # never observe the done-flag against a half-populated registry.
+        mark = getattr(registry, "mark_autoloaded", None)
+        if mark is not None:
+            mark()
+
+
+def db_from_sweeps(hardware: str, results: Iterable) -> TuningDB:
+    """Build a DB from :class:`repro.core.tuner.SweepResult` objects."""
+    db = TuningDB(hardware)
+    for res in results:
+        best = res.best
+        db.add(TuningRecord(
+            dtype=res.dtype, m=res.m, k=res.k, n=res.n,
+            bm=best.config.bm, bk=best.config.bk, bn=best.config.bn,
+            source=best.source, seconds=best.seconds, gflops=best.gflops))
+    return db

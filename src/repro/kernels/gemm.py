@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 from repro.kernels.ref import apply_epilogue
 
 
@@ -125,7 +127,7 @@ def gemm_pallas(
 
     # Grid iteration order: k innermost (revisits the same C tile) so the
     # accumulator scratch carries across k steps; i/j are parallel.
-    compiler_params = pltpu.CompilerParams(
+    compiler_params = pallas_compat.CompilerParams(
         dimension_semantics=("parallel", "parallel", "arbitrary"),
     )
 

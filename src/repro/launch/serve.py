@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.catalog import get_config
+from repro.core import tuning_db
+from repro.core.registry import GLOBAL_REGISTRY
 from repro.models import build_model
 from repro.serve import Engine, ServeConfig
 
@@ -23,7 +25,15 @@ def main() -> None:
                     help="';'-separated comma-token prompts")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--tuned-dir", default=None,
+                    help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
     args = ap.parse_args()
+
+    loaded = tuning_db.load_all(GLOBAL_REGISTRY, args.tuned_dir)
+    for path, count in loaded.items():
+        print(f"[tuned] {count} configs from {path}")
+    if not loaded:
+        print("[tuned] no tuning DB found; using built-in default tiles")
 
     cfg = get_config(args.arch)
     if args.reduced:

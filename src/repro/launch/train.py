@@ -19,6 +19,8 @@ import jax
 
 from repro.checkpoint import Checkpointer
 from repro.configs.catalog import get_config
+from repro.core import tuning_db
+from repro.core.registry import GLOBAL_REGISTRY
 from repro.data import DataConfig, TokenPipeline
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_host_mesh
@@ -45,7 +47,13 @@ def main() -> None:
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--step-deadline-s", type=float, default=None)
+    ap.add_argument("--tuned-dir", default=None,
+                    help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
     args = ap.parse_args()
+
+    loaded = tuning_db.load_all(GLOBAL_REGISTRY, args.tuned_dir)
+    for path, count in loaded.items():
+        print(f"[tuned] {count} configs from {path}")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -5,7 +5,7 @@ import os
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.core import (GLOBAL_REGISTRY, HOST_CPU, INTERPRET_SPACE, TPU_V5E,
                         TileConfig, TileRegistry, TuningSpace, sweep_gemm)

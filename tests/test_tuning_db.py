@@ -1,0 +1,288 @@
+"""Tuning-database subsystem: schema-checked persistence, nearest-shape
+fallback ordering, guided-vs-exhaustive search, and end-to-end pickup of a
+committed DB by a fresh process running matmul under pallas-interpret."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (SEARCH_EXHAUSTIVE, SEARCH_GUIDED, TileConfig,
+                        TileRegistry, TuningDB, TuningDBError, TuningRecord,
+                        sweep_gemm)
+from repro.core import tuning_db as tdb
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(REPO, "src")
+
+
+def _rec(m, k, n, bm=128, bk=128, bn=128, dtype="bfloat16", secs=1e-4):
+    return TuningRecord(dtype=dtype, m=m, k=k, n=n, bm=bm, bk=bk, bn=bn,
+                        source="model", seconds=secs, gflops=1.0)
+
+
+# ---------------------------------------------------------------------------
+# TuningDB persistence
+# ---------------------------------------------------------------------------
+
+def test_db_roundtrip(tmp_path):
+    db = TuningDB("tpu-v5e")
+    db.add(_rec(1024, 1024, 1024, 512, 1024, 1024))
+    db.add(_rec(2048, 2048, 2048, 256, 512, 512, dtype="float32"))
+    path = str(tmp_path / "tpu-v5e.json")
+    db.save(path)
+    db2 = TuningDB.from_file(path)
+    assert db2.hardware == "tpu-v5e"
+    assert len(db2) == 2
+    rec = db2.get("bfloat16", 1024, 1024, 1024)
+    assert rec.config == TileConfig(512, 1024, 1024)
+    assert rec.source == "model"
+
+
+def test_db_keep_best_merge():
+    db = TuningDB("tpu-v5e")
+    # model vs model: the LATEST sweep wins even with a worse score —
+    # estimates are recomputable, so a corrected cost model must be able to
+    # replace stale winners (see TuningDB.add docstring)
+    db.add(_rec(64, 64, 64, 128, 128, 128, secs=2e-4))
+    db.add(_rec(64, 64, 64, 256, 256, 256, secs=5e-4))
+    assert db.get("bfloat16", 64, 64, 64).config == TileConfig(256, 256, 256)
+    # measure vs measure: best-of-runs, worse score kept out
+    def meas(bm, secs):
+        return TuningRecord(dtype="float32", m=8, k=8, n=8,
+                            bm=bm, bk=bm, bn=bm, source="measure",
+                            seconds=secs)
+    db.add(meas(32, 2e-3))
+    db.add(meas(64, 1e-3))                               # better -> replaces
+    assert db.get("float32", 8, 8, 8).config == TileConfig(64, 64, 64)
+    db.add(meas(32, 5e-3))                               # worse -> kept out
+    assert db.get("float32", 8, 8, 8).config == TileConfig(64, 64, 64)
+
+
+def test_partial_shape_lookup_and_put_fall_back_to_generic():
+    """m without k/n must not crash the nearest-shape scan; partial puts are
+    stored as generic entries."""
+    reg = TileRegistry()
+    reg.put(TileConfig(512, 1024, 1024), "tpu-v5e", jnp.bfloat16,
+            1024, 1024, 1024)
+    assert reg.lookup("tpu-v5e", jnp.bfloat16, 512).source == "default"
+    reg.put(TileConfig(64, 128, 128), "tpu-v5e", jnp.bfloat16, 256)
+    assert reg.lookup("tpu-v5e", jnp.bfloat16, 512).source == "generic"
+
+
+def test_db_measure_outranks_model_estimate():
+    """Measured 'seconds' aren't comparable to analytic estimates: a real
+    measurement replaces a model entry even when its score looks worse, and
+    a model estimate can never displace a measurement."""
+    db = TuningDB("host-cpu")
+    db.add(TuningRecord(dtype="float32", m=64, k=64, n=64,
+                        bm=128, bk=128, bn=128, source="model", seconds=1e-6))
+    db.add(TuningRecord(dtype="float32", m=64, k=64, n=64,
+                        bm=32, bk=32, bn=32, source="measure", seconds=1e-3))
+    assert db.get("float32", 64, 64, 64).source == "measure"
+    db.add(TuningRecord(dtype="float32", m=64, k=64, n=64,
+                        bm=128, bk=128, bn=128, source="model", seconds=1e-9))
+    assert db.get("float32", 64, 64, 64).source == "measure"
+
+
+def test_explicit_load_supersedes_lazy_autoload(tmp_path, monkeypatch):
+    """A launcher's explicit --tuned-dir load must not be overwritten by the
+    registry's lazy default-dir autoload at first lookup."""
+    custom, default = tmp_path / "custom", tmp_path / "default"
+    db = TuningDB("tpu-v5e")
+    db.add(_rec(128, 128, 128, 256, 256, 256, dtype="float32"))
+    db.save(str(custom / "tpu-v5e.json"))
+    db2 = TuningDB("tpu-v5e")
+    db2.add(_rec(128, 128, 128, 512, 512, 512, dtype="float32"))
+    db2.save(str(default / "tpu-v5e.json"))
+    monkeypatch.setenv(tdb.TUNED_DIR_ENV, str(default))
+    reg = TileRegistry(autoload=True)
+    tdb.load_all(reg, str(custom))          # the explicit startup load
+    res = reg.lookup("tpu-v5e", jnp.float32, 128, 128, 128)
+    assert res.source == "exact"
+    assert res.config == TileConfig(256, 256, 256)   # custom entry survived
+
+
+def test_db_schema_version_mismatch_rejected(tmp_path):
+    path = str(tmp_path / "old.json")
+    blob = {"schema_version": tdb.SCHEMA_VERSION + 1, "hardware": "tpu-v5e",
+            "entries": []}
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    with pytest.raises(TuningDBError, match="schema_version"):
+        TuningDB.from_file(path)
+    # non-strict registry load skips with a warning instead of raising
+    reg = TileRegistry()
+    with pytest.warns(UserWarning, match="skipping tuning DB"):
+        loaded = tdb.load_into_registry(reg, path)
+    assert loaded == 0 and reg.entries() == {}
+
+
+def test_db_malformed_rejected(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.raises(TuningDBError):
+        TuningDB.from_file(path)
+    with open(path, "w") as f:
+        json.dump({"no_version": True}, f)
+    with pytest.raises(TuningDBError, match="schema_version"):
+        TuningDB.from_file(path)
+
+
+def test_db_merge_rejects_other_hardware():
+    a, b = TuningDB("tpu-v5e"), TuningDB("host-cpu")
+    with pytest.raises(TuningDBError, match="merge"):
+        a.merge(b)
+
+
+# ---------------------------------------------------------------------------
+# Nearest-shape fallback
+# ---------------------------------------------------------------------------
+
+def test_nearest_shape_ordering():
+    reg = TileRegistry()
+    near_cfg = TileConfig(256, 512, 512)
+    far_cfg = TileConfig(512, 1024, 1024)
+    reg.put(near_cfg, "tpu-v5e", jnp.bfloat16, 1024, 1024, 1024)
+    reg.put(far_cfg, "tpu-v5e", jnp.bfloat16, 8192, 8192, 8192)
+    # query between the two, closer (in log space) to 1024^3
+    res = reg.lookup("tpu-v5e", jnp.bfloat16, 1536, 1536, 1536)
+    assert res.source == "nearest"
+    assert res.matched_shape == (1024, 1024, 1024)
+    assert res.config == near_cfg
+    # query nearer the big entry resolves the other way
+    res = reg.lookup("tpu-v5e", jnp.bfloat16, 6000, 6000, 6000)
+    assert res.source == "nearest"
+    assert res.matched_shape == (8192, 8192, 8192)
+    assert res.config == far_cfg
+
+
+def test_nearest_shape_threshold_falls_back_to_default():
+    reg = TileRegistry()
+    reg.put(TileConfig(512, 1024, 1024), "tpu-v5e", jnp.bfloat16,
+            8192, 8192, 8192)
+    res = reg.lookup("tpu-v5e", jnp.bfloat16, 8, 8, 8)   # miles away
+    assert res.source == "default"
+    assert res.config == TileConfig(128, 128, 128)
+
+
+def test_lookup_tier_ordering_exact_beats_nearest_beats_generic():
+    reg = TileRegistry()
+    reg.put(TileConfig(64, 128, 128), "tpu-v5e", jnp.bfloat16)  # generic
+    reg.put(TileConfig(256, 256, 256), "tpu-v5e", jnp.bfloat16, 512, 512, 512)
+    assert reg.lookup("tpu-v5e", jnp.bfloat16, 512, 512, 512).source == "exact"
+    near = reg.lookup("tpu-v5e", jnp.bfloat16, 640, 512, 512)
+    assert near.source == "nearest"
+    assert near.config == TileConfig(256, 256, 256)
+    far = reg.lookup("tpu-v5e", jnp.bfloat16, 7, 7, 7)
+    assert far.source == "generic"
+    assert far.config == TileConfig(64, 128, 128)
+
+
+# ---------------------------------------------------------------------------
+# Guided search
+# ---------------------------------------------------------------------------
+
+def test_guided_evaluates_fewer_with_equal_or_better_winner():
+    kw = dict(dtype=jnp.bfloat16, mode="model", record=False)
+    full = sweep_gemm(4096, 4096, 4096, search=SEARCH_EXHAUSTIVE, **kw)
+    guided = sweep_gemm(4096, 4096, 4096, search=SEARCH_GUIDED, top_k=8, **kw)
+    assert guided.candidates_total == full.candidates_total
+    assert guided.evaluated < full.evaluated
+    assert len(guided.points) == guided.evaluated
+    assert guided.best.seconds <= full.best.seconds
+    assert guided.best.config == full.best.config
+
+
+def test_guided_search_records_winner_to_registry():
+    reg = TileRegistry()
+    res = sweep_gemm(2048, 2048, 2048, dtype=jnp.bfloat16, mode="model",
+                     search=SEARCH_GUIDED, registry=reg)
+    hit = reg.lookup("tpu-v5e", jnp.bfloat16, 2048, 2048, 2048)
+    assert hit.source == "exact"
+    assert hit.config == res.best.config
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: tune.py sweep -> fresh process matmul pickup
+# ---------------------------------------------------------------------------
+
+_PICKUP = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp
+    from repro.core import execution_context, matmul
+    from repro.core.registry import GLOBAL_REGISTRY
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    with execution_context(backend="pallas-interpret"):
+        out = matmul(x, w)          # tuned shape -> exact hit
+        x2 = jax.random.normal(jax.random.PRNGKey(2), (192, 512), jnp.float32)
+        out2 = matmul(x2, w)        # untuned shape -> nearest hit
+    exact = GLOBAL_REGISTRY.lookup("tpu-v5e", jnp.float32, 256, 512, 256)
+    near = GLOBAL_REGISTRY.lookup("tpu-v5e", jnp.float32, 192, 512, 256)
+    print("RESULT " + json.dumps({
+        "exact": exact.source, "near": near.source,
+        "near_matched": list(near.matched_shape),
+        "cfg": [exact.config.bm, exact.config.bk, exact.config.bn],
+        "stats": GLOBAL_REGISTRY.hit_stats,
+        "out_ok": bool(jnp.allclose(out, x @ w, atol=1e-3)),
+    }))
+""")
+
+
+def test_sweep_cli_then_fresh_process_matmul_pickup(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["REPRO_TUNED_DIR"] = str(tmp_path)
+    # 1. tune one small problem via the CLI into the tmp tuned dir
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "tune.py"), "sweep",
+         "--hardware", "tpu-v5e", "--mode", "model",
+         "--shapes", "256x512x256", "--dtype", "float32"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    db_file = tmp_path / "tpu-v5e.json"
+    assert db_file.exists()
+    db = TuningDB.from_file(str(db_file))
+    assert db.get("float32", 256, 512, 256) is not None
+
+    # 2. a FRESH process auto-loads it at first matmul
+    proc = subprocess.run([sys.executable, "-c", _PICKUP],
+                          capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    rec = json.loads(line[len("RESULT "):])
+    assert rec["exact"] == "exact"
+    assert rec["near"] == "nearest"
+    assert rec["near_matched"] == [256, 512, 256]
+    assert rec["out_ok"]
+    tuned = db.get("float32", 256, 512, 256)
+    assert rec["cfg"] == [tuned.bm, tuned.bk, tuned.bn]
+
+
+def test_autoload_respects_disable_env(tmp_path, monkeypatch):
+    db = TuningDB("tpu-v5e")
+    db.add(_rec(128, 128, 128, 256, 256, 256, dtype="float32"))
+    db.save(str(tmp_path / "tpu-v5e.json"))
+    monkeypatch.setenv(tdb.TUNED_DIR_ENV, str(tmp_path))
+    monkeypatch.setenv(tdb.DISABLE_ENV, "1")
+    reg = TileRegistry(autoload=True)
+    assert reg.lookup("tpu-v5e", jnp.float32, 128, 128, 128).source == "default"
+    # and with the kill switch off, the same lookup hits the DB
+    monkeypatch.delenv(tdb.DISABLE_ENV)
+    reg2 = TileRegistry(autoload=True)
+    assert reg2.lookup("tpu-v5e", jnp.float32, 128, 128, 128).source == "exact"
+
+
+def test_markdown_rendering_matches_tab4_shape():
+    db = TuningDB("tpu-v5e")
+    db.add(_rec(1024, 1024, 1024, 512, 1024, 1024))
+    md = db.markdown()
+    assert "paper Tab. 4" in md
+    assert "| bfloat16 | 1024 | 1024 | 1024 | 512x1024x1024 | model |" in md
