@@ -21,7 +21,7 @@ import sys
 import traceback
 
 SUITES = ["gemm_tuning", "gemm_scaling", "relative_peak", "ratio_model",
-          "model_step", "roofline_summary"]
+          "model_step", "roofline_summary", "serving"]
 
 
 def _run_suite(suite: str, smoke: bool):

@@ -9,8 +9,9 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
-from repro.core import (HOST_CPU, INTERPRET_SPACE, TPU_V5E, TileRegistry,
-                        capture_gemm_shapes, sweep_gemm, tune_model_gemms)
+from repro.core import (GLOBAL_REGISTRY, HOST_CPU, INTERPRET_SPACE, TPU_V5E,
+                        TileRegistry, capture_gemm_shapes, sweep_gemm,
+                        tune_model_gemms)
 from repro.configs.catalog import get_config
 from repro.models import build_model
 from repro.serve import Engine, ServeConfig
@@ -30,18 +31,39 @@ with tempfile.NamedTemporaryFile(suffix=".json") as f:
     print(f"[tune] persisted {len(reloaded.entries())} tuned entries (Tab. 4)")
 
 # -- 2. trace a real model's GEMM shapes and tune them all -------------------
+# Both the training forward AND the serving decode step are traced; tuning
+# the decode shapes into the process-global registry is what turns the
+# engine's per-token GEMM lookups below into 'exact' hits.
 cfg = get_config("llama3.2-1b").reduced()
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 with capture_gemm_shapes() as shapes:
     model.forward(params, {"tokens": jnp.zeros((2, 16), jnp.int32)})
+    jax.eval_shape(model.decode_step, params,
+                   jax.ShapeDtypeStruct((2, 1), jnp.int32),
+                   model.init_cache(2, 32),
+                   jax.ShapeDtypeStruct((), jnp.int32),
+                   jax.ShapeDtypeStruct((2,), jnp.int32))
 uniq = sorted(set(shapes))
-print(f"[trace] model issues {len(shapes)} GEMMs, {len(uniq)} unique shapes")
-tuned = tune_model_gemms(uniq, dtype=jnp.bfloat16, registry=reg)
+print(f"[trace] model issues {len(shapes)} GEMMs, {len(uniq)} unique shapes "
+      "(forward + decode step)")
+tuned = tune_model_gemms(uniq, dtype=cfg.dtype, registry=GLOBAL_REGISTRY)
 for shape, cfg_t in list(tuned.items())[:4]:
     print(f"[tune]   {str(shape):24s} -> {cfg_t.label}")
 
 # -- 3. serve with the tuned registry in ambient context ---------------------
-eng = Engine(model, params, ServeConfig(max_batch=1))
-out = eng.generate([[11, 22, 33]], max_new_tokens=6)
-print(f"[serve] {out}")
+# The engine is the production-shaped consumer: a fixed pool of KV-cache
+# slots, ragged prompts (left-pad + masking), and a fused device-resident
+# decode loop with ONE host transfer per generate call.
+eng = Engine(model, params, ServeConfig(max_batch=2))
+outs = eng.generate([[11, 22, 33], [44, 55, 66, 77, 88]], max_new_tokens=6)
+for p, o in zip(([11, 22, 33], [44, 55, 66, 77, 88]), outs):
+    print(f"[serve] {p} -> {o}")
+
+st = eng.stats()
+print(f"[serve] {int(st['tokens_generated'])} tokens in "
+      f"{int(st['waves'])} wave(s), {int(st['device_transfers'])} host "
+      f"transfer(s), {int(st['slot_reuses'])} slot reuse(s)")
+for shape, info in (st["decode_tile_lookups"] or {}).items():
+    print(f"[serve]   decode GEMM {shape:>14s} -> tile {info['tile']} "
+          f"({info['source']})")

@@ -1,6 +1,7 @@
 """Core: the paper's contribution — single-source tunable GEMM machinery."""
 from repro.core.gemm_api import (  # noqa: F401
-    ExecutionContext, capture_gemm_shapes, einsum, execution_context, matmul,
+    ExecutionContext, capture_gemm_shapes, current_hardware, einsum,
+    execution_context, matmul,
 )
 from repro.core.hardware import HARDWARE, HOST_CPU, TPU_V5E, get_hardware  # noqa: F401
 from repro.core.registry import (  # noqa: F401

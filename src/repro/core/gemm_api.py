@@ -66,6 +66,11 @@ def execution_context(**overrides):
         _TLS.ctx = old
 
 
+def current_hardware() -> str:
+    """Registry/tuner hardware key of the ambient execution context."""
+    return _ctx().hardware
+
+
 @contextlib.contextmanager
 def capture_gemm_shapes():
     """Collect every (m, k, n) issued under this scope — feeds the tuner."""

@@ -83,8 +83,11 @@ class TileRegistry:
         self._lock = threading.Lock()
         self._autoload_lock = threading.Lock()
         self._stats_lock = threading.Lock()
-        # shape-specific entries: (hw, dtype, m, k, n) -> TileConfig
-        self._exact: Dict[Tuple[str, str, int, int, int], TileConfig] = {}
+        # shape-specific entries, bucketed by (hw, dtype) so hot lookups
+        # (e.g. decode-shape GEMMs) never scan other hardware's entries:
+        # (hw, dtype) -> {(m, k, n) -> TileConfig}
+        self._exact: Dict[Tuple[str, str],
+                          Dict[Tuple[int, int, int], TileConfig]] = {}
         # shape-agnostic entries: (hw, dtype) -> TileConfig
         self._generic: Dict[Tuple[str, str], TileConfig] = {}
         self._path = path
@@ -121,7 +124,8 @@ class TileRegistry:
         has_shape = m is not None and k is not None and n is not None
         with self._lock:
             if has_shape:
-                hit = self._exact.get((hardware, dt, m, k, n))
+                bucket = self._exact.get((hardware, dt))
+                hit = bucket.get((m, k, n)) if bucket else None
                 if hit is not None:
                     res = LookupResult(hit, "exact", (m, k, n))
                     return self._count(res)
@@ -138,10 +142,10 @@ class TileRegistry:
 
     def _nearest_locked(self, hardware: str, dt: str,
                         shape: Tuple[int, int, int]) -> Optional[LookupResult]:
+        # Scans only this (hardware, dtype) bucket — other backends' tuned
+        # shapes never slow down (or leak into) this lookup.
         best = None
-        for (hw, d, m, k, n), cfg in self._exact.items():
-            if hw != hardware or d != dt:
-                continue
+        for (m, k, n), cfg in self._exact.get((hardware, dt), {}).items():
             dist = _shape_dist(shape, (m, k, n))
             if dist > NEAREST_MAX_LOG2_DIST:
                 continue
@@ -173,7 +177,7 @@ class TileRegistry:
                 # anything short of a full (m, k, n) is a generic entry
                 self._generic[(hardware, dt)] = cfg
             else:
-                self._exact[(hardware, dt, m, k, n)] = cfg
+                self._exact.setdefault((hardware, dt), {})[(m, k, n)] = cfg
 
     def clear(self) -> None:
         with self._lock:
@@ -203,14 +207,16 @@ class TileRegistry:
                     self._generic[(parts[0], parts[1])] = cfg
                 else:
                     m, k, n = (int(x) for x in parts[2].split("x"))
-                    self._exact[(parts[0], parts[1], m, k, n)] = cfg
+                    self._exact.setdefault(
+                        (parts[0], parts[1]), {})[(m, k, n)] = cfg
 
     def entries(self) -> Dict[str, TileConfig]:
         with self._lock:
             out = {_key_str(hw, dt): cfg
                    for (hw, dt), cfg in self._generic.items()}
             out.update({_key_str(hw, dt, m, k, n): cfg
-                        for (hw, dt, m, k, n), cfg in self._exact.items()})
+                        for (hw, dt), bucket in self._exact.items()
+                        for (m, k, n), cfg in bucket.items()})
         return out
 
 

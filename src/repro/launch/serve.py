@@ -1,7 +1,10 @@
-"""Serving driver: batched generation with the Engine.
+"""Serving driver: continuous-batching generation with the Engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \
-      --prompts "1,2,3;4,5,6" --max-new 16
+      --prompts "1,2,3;4,5,6,7,8" --max-new 16
+
+Ragged prompt lengths are handled natively (left-pad + masking); more
+prompts than ``--max-batch`` are served in waves over the fixed slot pool.
 """
 from __future__ import annotations
 
@@ -24,7 +27,11 @@ def main() -> None:
     ap.add_argument("--prompts", default="1,2,3;7,8,9",
                     help="';'-separated comma-token prompts")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="KV-cache slots (default: number of prompts)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stats", action="store_true",
+                    help="print engine stats (throughput, tile provenance)")
     ap.add_argument("--tuned-dir", default=None,
                     help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
     args = ap.parse_args()
@@ -48,11 +55,23 @@ def main() -> None:
         extra[k] = jnp.zeros(sds.shape, sds.dtype)
 
     eng = Engine(model, params,
-                 ServeConfig(max_batch=len(prompts),
-                             temperature=args.temperature))
+                 ServeConfig(max_batch=args.max_batch or len(prompts),
+                             temperature=args.temperature,
+                             profile=args.stats))
     outs = eng.generate(prompts, args.max_new, extra_inputs=extra or None)
     for p, o in zip(prompts, outs):
         print(f"prompt={p} -> {o}")
+
+    if args.stats:
+        st = eng.stats()
+        toks = st["tokens_generated"]
+        dec_s = st["decode_seconds"] or 1e-9
+        print(f"[stats] {int(toks)} tokens, {int(st['waves'])} wave(s), "
+              f"{int(st['device_transfers'])} host transfer(s), "
+              f"decode {toks / dec_s:.0f} tok/s")
+        for shape, info in (st["decode_tile_lookups"] or {}).items():
+            print(f"[tiles] decode GEMM {shape:>16s} -> {info['tile']} "
+                  f"({info['source']})")
 
 
 if __name__ == "__main__":

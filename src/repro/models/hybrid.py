@@ -71,9 +71,9 @@ def _mamba_block(cfg, bp, x):
     return constrain(x, "hidden")
 
 
-def _mamba_block_prefill(cfg, bp, x):
+def _mamba_block_prefill(cfg, bp, x, valid=None):
     y, state = S.ssm_block(bp["ssm"], L.apply_norm(bp["ln"], x, eps=cfg.norm_eps),
-                           cfg, return_state=True)
+                           cfg, return_state=True, valid_mask=valid)
     return constrain(x + y, "hidden"), state
 
 
@@ -83,13 +83,14 @@ def _mamba_block_step(cfg, bp, x, state):
     return x + y, new_state
 
 
-def _shared_attn_apply(cfg, sp, x, positions, kv_cache=None, cache_offset=None):
+def _shared_attn_apply(cfg, sp, x, positions, kv_cache=None, cache_offset=None,
+                       kv_start=None):
     h, new_cache = L.attention(
         sp["attn"], L.apply_norm(sp["ln1"], x, eps=cfg.norm_eps),
         T.attn_dims(cfg), positions=positions,
         rope_theta=cfg.rope_theta if cfg.use_rope else 0.0,
         kv_cache=kv_cache, cache_offset=cache_offset,
-        p_dtype=jnp.dtype(cfg.attn_p_dtype))
+        p_dtype=jnp.dtype(cfg.attn_p_dtype), kv_start=kv_start)
     x = x + h
     x = x + L.mlp(sp["mlp"], L.apply_norm(sp["ln2"], x, eps=cfg.norm_eps))
     return constrain(x, "hidden"), new_cache
@@ -153,15 +154,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
 def prefill(cfg: ModelConfig, params, batch, cache):
     tokens = batch["tokens"]
     b, s = tokens.shape
+    kv_start = batch.get("kv_start")
     x = T._embed(cfg, params, tokens)
-    pos = T._positions(b, s)
+    pos = (T._positions(b, s) if kv_start is None
+           else T._ragged_positions(s, kv_start))
+    # Ragged batches: left-pad columns must not perturb the recurrent state.
+    # SSD contributions are linear in the (post-conv) inputs, so zeroing the
+    # pad columns inside the SSM block makes the state entering the first
+    # real token exactly the zero init — see ssm_block(valid_mask=...).
+    valid = None if kv_start is None else (
+        jnp.arange(s, dtype=jnp.int32)[None, :] >= kv_start[:, None])
     offset = jnp.int32(0)
 
     if cfg.family == "ssm":
         # Full-sequence SSD pass; the chunked kernel also yields the exact
         # recurrent state after the last position for decode hand-off.
         def body(x, bp):
-            x, state = _mamba_block_prefill(cfg, bp, x)
+            x, state = _mamba_block_prefill(cfg, bp, x, valid=valid)
             return x, state
         x, new_states = jax.lax.scan(body, x, params["blocks"])
         logits = T._unembed(cfg, params, x[:, -1:, :])[:, 0]
@@ -172,10 +181,11 @@ def prefill(cfg: ModelConfig, params, batch, cache):
         x = carry
         unit_params, (ck, cv) = xs
         x, new_kv = _shared_attn_apply(cfg, params["shared_attn"], x, pos,
-                                       kv_cache=(ck, cv), cache_offset=offset)
+                                       kv_cache=(ck, cv), cache_offset=offset,
+                                       kv_start=kv_start)
 
         def inner(xx, bp):
-            return _mamba_block_prefill(cfg, bp, xx)
+            return _mamba_block_prefill(cfg, bp, xx, valid=valid)
         x, states = jax.lax.scan(inner, x, unit_params)
         return x, (states, new_kv)
 
@@ -187,10 +197,13 @@ def prefill(cfg: ModelConfig, params, batch, cache):
     return logits, {"ssm": new_states, "self": new_self}
 
 
-def decode_step(cfg: ModelConfig, params, tokens, cache, offset):
+def decode_step(cfg: ModelConfig, params, tokens, cache, offset, kv_start=None):
     b = tokens.shape[0]
     x = T._embed(cfg, params, tokens)
-    pos = jnp.broadcast_to(offset.astype(jnp.int32), (b, 1))
+    if kv_start is None:
+        pos = jnp.broadcast_to(offset.astype(jnp.int32), (b, 1))
+    else:
+        pos = jnp.maximum(offset.astype(jnp.int32) - kv_start, 0)[:, None]
 
     if cfg.family == "ssm":
         def body(x, xs):
@@ -205,7 +218,8 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, offset):
         x = carry
         unit_params, states, (ck, cv) = xs
         x, new_kv = _shared_attn_apply(cfg, params["shared_attn"], x, pos,
-                                       kv_cache=(ck, cv), cache_offset=offset)
+                                       kv_cache=(ck, cv), cache_offset=offset,
+                                       kv_start=kv_start)
 
         def inner(xx, ys):
             bp, st = ys

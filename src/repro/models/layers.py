@@ -96,12 +96,15 @@ def attention_template(d_model: int, dims: AttnDims, qkv_bias: bool = False):
 
 
 def _sdpa_chunked(q, k, v, *, causal: bool, q_offset, kv_len: Optional[jax.Array],
-                  chunk: int = 1024, p_dtype=jnp.float32) -> jax.Array:
+                  chunk: int = 1024, p_dtype=jnp.float32,
+                  kv_start: Optional[jax.Array] = None) -> jax.Array:
     """Grouped scaled-dot-product attention, chunked over queries.
 
     q: (B, Sq, KV, G, hd);  k, v: (B, Skv, KV, hd)
     q_offset: scalar int — absolute position of q[0] (decode: cache length).
     kv_len: optional scalar — number of valid cache entries (<= Skv).
+    kv_start: optional (B,) int32 — first valid cache column per row, for
+      left-padded ragged batches (columns < kv_start[b] are pad and masked).
     """
     b, sq, kvh, g, hd = q.shape
     skv = k.shape[1]
@@ -119,7 +122,11 @@ def _sdpa_chunked(q, k, v, *, causal: bool, q_offset, kv_len: Optional[jax.Array
             mask &= col_ids[None, :] <= rows[:, None]
         if kv_len is not None:
             mask &= col_ids[None, :] < kv_len
-        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        if kv_start is None:
+            s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        else:  # per-row pad mask -> (B, C, Skv)
+            maskb = mask[None] & (col_ids[None, None, :] >= kv_start[:, None, None])
+            s = jnp.where(maskb[:, :, None, None, :], s, -1e30)
         p = jax.nn.softmax(s, axis=-1).astype(p_dtype)
         return einsum("bqkgt,btkd->bqkgd", p, vf).astype(q.dtype)
 
@@ -170,6 +177,7 @@ def attention(
     q_chunk: int = 1024,
     p_dtype=jnp.float32,
     attn_impl: str = "chunked",
+    kv_start: Optional[jax.Array] = None,
 ):
     """Returns (out, new_kv_cache_or_None).
 
@@ -177,6 +185,8 @@ def attention(
       new KV is written at ``cache_offset`` and attention runs on the cache.
     * cross-attention: pass precomputed ``kv_override`` (from ``cross_kv``);
       non-causal, cache untouched.
+    * ragged batches: ``kv_start`` (B,) marks the first non-pad column per
+      row (left padding); pad columns are excluded from every softmax.
     """
     b, s, _ = x.shape
     h, kvh, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
@@ -197,7 +207,7 @@ def attention(
         q = apply_rope(q, positions, theta=rope_theta, fraction=rope_fraction)
         k = apply_rope(k, positions, theta=rope_theta, fraction=rope_fraction)
 
-    if attn_impl == "flash" and kv_cache is None:
+    if attn_impl == "flash" and kv_cache is None and kv_start is None:
         # Pallas flash-attention kernel: training / no-cache path only (the
         # cache paths keep the chunked jnp implementation).  Interpret mode
         # executes the kernel body on CPU; on TPU it compiles natively.
@@ -230,7 +240,8 @@ def attention(
 
     qg = q.reshape(b, s, kvh, dims.group, hd)
     out = _sdpa_chunked(qg, k, v, causal=causal, q_offset=q_offset,
-                        kv_len=kv_len, chunk=q_chunk, p_dtype=p_dtype)
+                        kv_len=kv_len, chunk=q_chunk, p_dtype=p_dtype,
+                        kv_start=kv_start)
     out = out.reshape(b, s, h * hd)
     return matmul(out, params["wo"]), new_cache
 

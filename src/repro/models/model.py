@@ -53,10 +53,13 @@ class Model:
         return self._mod().init_cache(self.cfg, batch, max_len, dtype)
 
     def prefill(self, params, batch, cache):
+        """``batch`` may carry ``kv_start`` (B,) left-pad offsets for ragged
+        batches; see transformer.prefill."""
         return self._mod().prefill(self.cfg, params, batch, cache)
 
-    def decode_step(self, params, tokens, cache, offset):
-        return self._mod().decode_step(self.cfg, params, tokens, cache, offset)
+    def decode_step(self, params, tokens, cache, offset, kv_start=None):
+        return self._mod().decode_step(self.cfg, params, tokens, cache,
+                                       offset, kv_start)
 
     # extra model inputs beyond tokens (modality-frontend STUBS) ---------
     def extra_inputs(self, batch_size: int) -> Dict[str, jax.ShapeDtypeStruct]:

@@ -69,12 +69,19 @@ def _causal_conv(params, xBC, cfg: ModelConfig):
 
 
 def ssm_block(params, x: jax.Array, cfg: ModelConfig,
-              return_state: bool = False):
+              return_state: bool = False, valid_mask=None):
     """Full-sequence SSD forward.  x: (B, S, D) with S % ssm_chunk == 0.
 
     ``return_state=True`` additionally returns the recurrent state after the
     last position — {"conv", "ssm"} — so prefill can hand off to the
     single-token decode path exactly.
+
+    ``valid_mask`` (B, S) bool marks real tokens in a left-padded ragged
+    batch.  Pad columns are zeroed both pre-conv (so early real tokens see
+    the same zero conv left-context a lone prompt would) and post-conv (so
+    pad positions contribute nothing to the recurrent state — every decay
+    span between real tokens covers only real tokens, making the state
+    entering the first real token exactly the zero init).
     """
     b, s, _ = x.shape
     d_inner, n_heads, _, _ = ssm_dims(cfg)
@@ -89,9 +96,13 @@ def ssm_block(params, x: jax.Array, cfg: ModelConfig,
     nc = s // l
 
     z, xBC, dt = _split_zxbcdt(cfg, matmul(x, params["in_proj"]))
+    if valid_mask is not None:
+        xBC = jnp.where(valid_mask[..., None], xBC, 0)
     xBC_pre = xBC
     xBC = _causal_conv(params, xBC, cfg)
     xs, bs, cs = xBC[..., :d_inner], xBC[..., d_inner:d_inner + n], xBC[..., d_inner + n:]
+    if valid_mask is not None:
+        xs = jnp.where(valid_mask[..., None], xs, 0)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])      # (B,S,H)
     a = -jnp.exp(params["A_log"].astype(jnp.float32))                     # (H,)

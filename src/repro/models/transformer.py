@@ -115,7 +115,7 @@ def _whisper_dec_block_template(cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _dense_block(cfg: ModelConfig, bp, x, positions, kv_cache=None,
-                 cache_offset=None):
+                 cache_offset=None, kv_start=None):
     dims = attn_dims(cfg)
     h, new_cache = L.attention(
         bp["attn"], L.apply_norm(bp["ln1"], x, eps=cfg.norm_eps), dims,
@@ -124,7 +124,7 @@ def _dense_block(cfg: ModelConfig, bp, x, positions, kv_cache=None,
         rope_fraction=cfg.rope_fraction,
         kv_cache=kv_cache, cache_offset=cache_offset,
         p_dtype=jnp.dtype(cfg.attn_p_dtype),
-        attn_impl=cfg.attention_impl)
+        attn_impl=cfg.attention_impl, kv_start=kv_start)
     x = x + h
     y_in = L.apply_norm(bp["ln2"], x, eps=cfg.norm_eps)
     if cfg.num_experts:
@@ -162,7 +162,8 @@ def _maybe_remat(cfg: ModelConfig, fn):
 # Decoder-only stacks (dense / moe)
 # ---------------------------------------------------------------------------
 
-def _run_dense_stack(cfg, blocks, x, positions, caches=None, cache_offset=None):
+def _run_dense_stack(cfg, blocks, x, positions, caches=None, cache_offset=None,
+                     kv_start=None):
     """scan over stacked layer params (+ caches).  Returns (x, new_caches, aux)."""
     has_cache = caches is not None
 
@@ -171,7 +172,8 @@ def _run_dense_stack(cfg, blocks, x, positions, caches=None, cache_offset=None):
         bp = xs[0] if has_cache else xs
         cache = xs[1] if has_cache else None
         x, new_cache, a = _dense_block(cfg, bp, x, positions,
-                                       kv_cache=cache, cache_offset=cache_offset)
+                                       kv_cache=cache, cache_offset=cache_offset,
+                                       kv_start=kv_start)
         return (constrain(x, "hidden"), aux + a), new_cache
 
     xs = (blocks, caches) if has_cache else blocks
@@ -198,6 +200,14 @@ def _unembed(cfg, params, x):
 def _positions(batch: int, seq: int, offset=0):
     return offset + jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
                                      (batch, seq))
+
+
+def _ragged_positions(seq: int, kv_start):
+    """Per-row positions for a left-padded ragged batch: the first real token
+    of every row sits at position 0 (pad columns clamp to 0 — they're masked
+    out of attention anyway)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] - kv_start[:, None]
+    return jnp.maximum(pos, 0)
 
 
 def forward_hidden(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
@@ -260,11 +270,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
 
 def prefill(cfg: ModelConfig, params, batch, cache):
     """Run the prompt through the model, filling ``cache``.
-    Returns (last-token logits (B, V), new_cache)."""
+    Returns (last-token logits (B, V), new_cache).
+
+    ``batch["kv_start"]`` (optional, (B,) int32) marks per-row left-pad
+    lengths for ragged batches: pad columns are masked out of attention and
+    positions restart at 0 at each row's first real token, so every row
+    computes exactly what it would alone (prompts are right-aligned, so the
+    shared last column is each row's final prompt token)."""
     tokens = batch["tokens"]
     b, s = tokens.shape
+    kv_start = batch.get("kv_start")
     x = _embed(cfg, params, tokens)
-    pos = _positions(b, s)
+    pos = _positions(b, s) if kv_start is None else _ragged_positions(s, kv_start)
     offset = jnp.int32(0)
     if cfg.family == "vlm":
         cache = dict(cache)
@@ -272,50 +289,66 @@ def prefill(cfg: ModelConfig, params, batch, cache):
         x, new_self, _ = _run_vlm_stack(cfg, params, x, pos,
                                         cross_cache=cache["cross"],
                                         self_caches=cache["self"],
-                                        cache_offset=offset)
+                                        cache_offset=offset,
+                                        kv_start=kv_start)
         new_cache = {"self": new_self, "cross": cache["cross"]}
     elif cfg.family == "audio":
         enc = _run_encoder(cfg, params, batch["encoder_embeds"])
         cross = _whisper_cross_cache(cfg, params, enc)
-        x = x + params["pos_emb"][:s][None].astype(x.dtype)
+        if kv_start is None:
+            x = x + params["pos_emb"][:s][None].astype(x.dtype)
+        else:  # per-row shifted learned positions
+            x = x + params["pos_emb"][pos].astype(x.dtype)
         x, new_self, _ = _run_whisper_decoder(cfg, params, x, pos,
                                               enc, cross_cache=cross,
                                               self_caches=cache["self"],
-                                              cache_offset=offset)
+                                              cache_offset=offset,
+                                              kv_start=kv_start)
         new_cache = {"self": new_self, "cross": cross}
     else:
         x, new_self, _ = _run_dense_stack(cfg, params["blocks"], x, pos,
                                           caches=cache["self"],
-                                          cache_offset=offset)
+                                          cache_offset=offset,
+                                          kv_start=kv_start)
         new_cache = {"self": new_self}
     logits = _unembed(cfg, params, x[:, -1:, :])[:, 0]
     return logits, new_cache
 
 
-def decode_step(cfg: ModelConfig, params, tokens, cache, offset):
+def decode_step(cfg: ModelConfig, params, tokens, cache, offset, kv_start=None):
     """One token step.  tokens: (B, 1); offset: scalar int32 = current length.
+    ``kv_start``: optional (B,) pad offsets for ragged batches (see prefill).
     Returns (logits (B, V), new_cache)."""
     b = tokens.shape[0]
     x = _embed(cfg, params, tokens)
-    pos = jnp.broadcast_to(offset.astype(jnp.int32), (b, 1))
+    if kv_start is None:
+        pos = jnp.broadcast_to(offset.astype(jnp.int32), (b, 1))
+    else:
+        pos = jnp.maximum(offset.astype(jnp.int32) - kv_start, 0)[:, None]
     if cfg.family == "vlm":
         x, new_self, _ = _run_vlm_stack(cfg, params, x, pos,
                                         cross_cache=cache["cross"],
                                         self_caches=cache["self"],
-                                        cache_offset=offset)
+                                        cache_offset=offset,
+                                        kv_start=kv_start)
         new_cache = {"self": new_self, "cross": cache["cross"]}
     elif cfg.family == "audio":
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["pos_emb"], offset, 1, 0)[None].astype(x.dtype)
+        if kv_start is None:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_emb"], offset, 1, 0)[None].astype(x.dtype)
+        else:
+            x = x + params["pos_emb"][pos[:, 0]][:, None].astype(x.dtype)
         x, new_self, _ = _run_whisper_decoder(cfg, params, x, pos, None,
                                               cross_cache=cache["cross"],
                                               self_caches=cache["self"],
-                                              cache_offset=offset)
+                                              cache_offset=offset,
+                                              kv_start=kv_start)
         new_cache = {"self": new_self, "cross": cache["cross"]}
     else:
         x, new_self, _ = _run_dense_stack(cfg, params["blocks"], x, pos,
                                           caches=cache["self"],
-                                          cache_offset=offset)
+                                          cache_offset=offset,
+                                          kv_start=kv_start)
         new_cache = {"self": new_self}
     logits = _unembed(cfg, params, x)[:, 0]
     return logits, new_cache
@@ -334,7 +367,8 @@ def _vlm_cross_cache(cfg, params, image_embeds):
 
 
 def _run_vlm_stack(cfg, params, x, positions, image_embeds=None,
-                   cross_cache=None, self_caches=None, cache_offset=None):
+                   cross_cache=None, self_caches=None, cache_offset=None,
+                   kv_start=None):
     dims = attn_dims(cfg)
     if cross_cache is None:
         cross_cache = _vlm_cross_cache(cfg, params, image_embeds)
@@ -353,7 +387,8 @@ def _run_vlm_stack(cfg, params, x, positions, image_embeds=None,
             bp = ys[0] if has_cache else ys
             cache = ys[1] if has_cache else None
             xx, nc, da = _dense_block(cfg, bp, xx, positions, kv_cache=cache,
-                                      cache_offset=cache_offset)
+                                      cache_offset=cache_offset,
+                                      kv_start=kv_start)
             return (constrain(xx, "hidden"), a + da), nc
 
         ys = (selfs, scache) if has_cache else selfs
@@ -398,7 +433,7 @@ def _whisper_cross_cache(cfg, params, enc):
 
 
 def _run_whisper_decoder(cfg, params, x, positions, enc, cross_cache=None,
-                         self_caches=None, cache_offset=None):
+                         self_caches=None, cache_offset=None, kv_start=None):
     dims = attn_dims(cfg)
     if cross_cache is None:
         cross_cache = _whisper_cross_cache(cfg, params, enc)
@@ -414,7 +449,7 @@ def _run_whisper_decoder(cfg, params, x, positions, enc, cross_cache=None,
         h, new_cache = L.attention(
             bp["attn"], L.apply_norm(bp["ln1"], x, eps=cfg.norm_eps), dims,
             positions=positions, kv_cache=cache, cache_offset=cache_offset,
-            p_dtype=jnp.dtype(cfg.attn_p_dtype))
+            p_dtype=jnp.dtype(cfg.attn_p_dtype), kv_start=kv_start)
         x = x + h
         h, _ = L.attention(bp["cross"],
                            L.apply_norm(bp["ln_x"], x, eps=cfg.norm_eps),

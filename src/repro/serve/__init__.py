@@ -1,1 +1,4 @@
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
+from repro.serve.reference import (  # noqa: F401
+    PerTokenSyncEngine, generate_per_prompt, generate_per_token_sync,
+)

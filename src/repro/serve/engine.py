@@ -1,13 +1,35 @@
-"""Batched serving engine: continuous prefill + decode with a static KV cache.
+"""Device-resident continuous-batching serve engine.
 
-Simple but production-shaped: fixed-capacity batch slots, greedy or
-temperature sampling, per-request stop handling, jit'd prefill/decode steps
-reused across requests (no recompilation per request).
+Production-shaped serving over a fixed pool of ``max_batch`` KV-cache slots:
+
+* **Slot scheduler** — requests are admitted into free slots and evicted on
+  completion; the KV cache is allocated once per engine and reused across
+  ``generate`` calls (stale entries are never attended thanks to per-slot
+  ``kv_start``/length masking).  More requests than slots are served in
+  successive waves.
+* **Fused decode loop** — a single ``jax.lax.while_loop`` carries tokens,
+  per-slot done flags, per-slot token budgets, EOS checks, the sampling key
+  and the KV cache entirely on device.  Exactly ONE ``jax.device_get`` per
+  decode wave — i.e. per ``generate`` call whenever the batch fits the slot
+  pool — fetches the finished token buffer; no per-token host round-trips.
+* **Ragged batches** — prompts are right-aligned (left-padded); the per-slot
+  pad offset ``kv_start`` is threaded through the model so attention masks
+  pad columns, RoPE/learned positions restart at each row's first real
+  token, and SSM blocks zero pad contributions.  Each row therefore decodes
+  exactly what it would decode alone.
+* **Tuned tiles** — the decode step's GEMM shapes are traced once and
+  resolved against the global tile registry; the lookup provenance
+  (exact/nearest/generic/default) is surfaced in :meth:`Engine.stats`.
+
+Prompt lengths are bucketed to powers of two (min 8) so a wave and a lone
+prompt in the same bucket share one compiled prefill *and* take bit-identical
+float paths — the basis of the ragged-batch parity guarantee.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -15,66 +37,342 @@ import numpy as np
 
 from repro.models.model import Model
 
+_PLEN_BUCKET_MIN = 8
+
+
+def _bucket_len(n: int) -> int:
+    b = _PLEN_BUCKET_MIN
+    while b < n:
+        b *= 2
+    return b
+
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_batch: int = 8
-    max_len: int = 512
+    max_batch: int = 8                # KV-cache slots
+    max_len: int = 512                # per-slot cache capacity (prompt + new)
     temperature: float = 0.0          # 0 => greedy
     eos_token: Optional[int] = None
     seed: int = 0
+    profile: bool = False             # block after prefill to split timings
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    row: Optional[int] = None         # row in the shared extra_inputs arrays
+    slot: Optional[int] = None
+    tokens: Optional[List[int]] = None
+
+
+class _SlotScheduler:
+    """Admit/evict bookkeeping over the fixed pool of KV-cache slots."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free = list(range(n_slots))
+        self._use_count = [0] * n_slots
+        self.admitted = 0
+        self.evicted = 0
+
+    def admit(self, req: _Request) -> int:
+        if not self._free:
+            raise RuntimeError("no free KV-cache slot")
+        slot = self._free.pop(0)
+        req.slot = slot
+        self._use_count[slot] += 1
+        self.admitted += 1
+        return slot
+
+    def evict(self, req: _Request) -> None:
+        self._free.append(req.slot)
+        self._free.sort()
+        self.evicted += 1
+
+    @property
+    def reuses(self) -> int:
+        return sum(max(c - 1, 0) for c in self._use_count)
 
 
 class Engine:
+    """Continuous-batching engine over a fixed slot pool.
+
+    ``generate`` is the batched entry point; ``submit``/``run`` expose the
+    underlying request queue for callers that stream requests in.
+    """
+
     def __init__(self, model: Model, params, cfg: ServeConfig):
         self.model = model
         self.params = params
         self.cfg = cfg
         self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+        self._loop = None                 # built lazily (per-engine closure)
+        self._cache = None                # allocated once, reused across calls
+        self._sched = _SlotScheduler(cfg.max_batch)
+        self._queue: List[_Request] = []
+        self._next_rid = 0
+        self._tile_lookups: Optional[Dict[str, Dict[str, object]]] = None
+        self._stats: Dict[str, float] = {
+            "requests": 0, "tokens_generated": 0, "generate_calls": 0,
+            "waves": 0, "device_transfers": 0, "cache_allocs": 0,
+            "prefill_seconds": 0.0, "decode_seconds": 0.0,
+            "total_seconds": 0.0,
+        }
 
+    # -- sampling ------------------------------------------------------
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(key, logits / self.cfg.temperature, axis=-1)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
 
+    # -- fused device-resident decode loop -----------------------------
+    def _build_loop(self):
+        decode = self.model.decode_step
+        eos = self.cfg.eos_token
+
+        def loop(params, cache, logits0, key, kv_start, budget, offset0, *,
+                 width: int):
+            b = logits0.shape[0]
+            # Split BEFORE the first sample: the parent key is reserved for
+            # splitting only, so the first token is uncorrelated with later
+            # ones.
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits0, sub)
+            done = budget <= 0                 # empty slots start finished
+            buf = jnp.zeros((b, width), jnp.int32)
+            lens = jnp.zeros((b,), jnp.int32)
+
+            def cond(carry):
+                step, cur, done, buf, lens, cache, offset, key = carry
+                return (step < width) & ~done.all()
+
+            def body(carry):
+                step, cur, done, buf, lens, cache, offset, key = carry
+                buf = jax.lax.dynamic_update_slice(
+                    buf, jnp.where(done, 0, cur)[:, None], (0, step))
+                lens = lens + jnp.where(done, 0, 1).astype(jnp.int32)
+                if eos is not None:
+                    done = done | (cur == eos)
+                done = done | (lens >= budget)
+                step = step + 1
+
+                def advance(op):
+                    cache, cur, key, offset = op
+                    key, sub = jax.random.split(key)
+                    logits, cache = decode(params, cur[:, None], cache,
+                                           offset, kv_start)
+                    return cache, self._sample(logits, sub), key, offset + 1
+
+                # Skip the model step once every live slot has finished.
+                cache, cur, key, offset = jax.lax.cond(
+                    (step < width) & ~done.all(), advance, lambda op: op,
+                    (cache, cur, key, offset))
+                return step, cur, done, buf, lens, cache, offset, key
+
+            carry = (jnp.int32(0), cur, done, buf, lens, cache, offset0, key)
+            _, _, _, buf, lens, cache, _, _ = jax.lax.while_loop(
+                cond, body, carry)
+            return buf, lens, cache
+
+        return jax.jit(loop, static_argnames=("width",))
+
+    # -- slot-pool cache -----------------------------------------------
+    def _ensure_cache(self):
+        if self._cache is None:
+            self._cache = self.model.init_cache(self.cfg.max_batch,
+                                                self.cfg.max_len)
+            self._stats["cache_allocs"] += 1
+            self._trace_decode_tiles()
+        return self._cache
+
+    def _trace_decode_tiles(self) -> None:
+        """Abstractly trace one decode step, resolve its GEMM shapes against
+        the tuned-tile registry, and record the lookup provenance."""
+        from repro.core import capture_gemm_shapes, current_hardware
+        from repro.core.registry import GLOBAL_REGISTRY
+        b = self.cfg.max_batch
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        off = jax.ShapeDtypeStruct((), jnp.int32)
+        ks = jax.ShapeDtypeStruct((b,), jnp.int32)
+        try:
+            with capture_gemm_shapes() as shapes:
+                jax.eval_shape(self.model.decode_step, self.params, tok,
+                               self._cache, off, ks)
+        except Exception:      # provenance is telemetry, never fatal
+            self._tile_lookups = {}
+            return
+        hw = current_hardware()
+        dtype = self.model.cfg.dtype
+        lookups = {}
+        for (m, k, n) in sorted(set(shapes)):
+            res = GLOBAL_REGISTRY.lookup(hw, dtype, m, k, n)
+            lookups[f"{m}x{k}x{n}"] = {
+                "source": res.source,
+                "tile": res.config.label,
+                "matched_shape": res.matched_shape,
+            }
+        self._tile_lookups = lookups
+
+    # -- request queue --------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               row: Optional[int] = None) -> int:
+        """Queue one request; returns its request id (see :meth:`run`)."""
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt: each prompt needs >= 1 token")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Request(rid, prompt, int(max_new_tokens), row))
+        self._stats["requests"] += 1
+        return rid
+
+    def run(self, extra_inputs: Optional[Dict[str, jax.Array]] = None
+            ) -> Dict[int, List[int]]:
+        """Drain the queue in waves of up to ``max_batch`` slots."""
+        results: Dict[int, List[int]] = {}
+        # One key per run, split per wave: waves draw decorrelated samples
+        # while repeated runs stay deterministic for a fixed seed.
+        key = jax.random.PRNGKey(self.cfg.seed)
+        while self._queue:
+            wave = [self._queue.pop(0)
+                    for _ in range(min(len(self._queue), self.cfg.max_batch))]
+            key, wave_key = jax.random.split(key)
+            self._run_wave(wave, extra_inputs, wave_key)
+            for r in wave:
+                results[r.rid] = r.tokens
+        return results
+
+    # -- batched generation ---------------------------------------------
     def generate(self, prompts: List[List[int]], max_new_tokens: int,
                  extra_inputs: Optional[Dict[str, jax.Array]] = None
                  ) -> List[List[int]]:
-        """Batched generation.  Prompts are right-aligned padded to a common
-        length (static shapes => one compilation)."""
-        cfg = self.cfg
-        assert len(prompts) <= cfg.max_batch
-        b = len(prompts)
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((b, plen), np.int32)
-        for i, p in enumerate(prompts):  # left-pad with repeats of first token
-            toks[i, plen - len(p):] = p
-            toks[i, :plen - len(p)] = p[0]
-
-        batch = {"tokens": jnp.asarray(toks)}
+        """Batched generation; prompts beyond ``max_batch`` run in waves."""
+        # Validate the whole batch BEFORE the first submit so a bad prompt
+        # can't leave earlier requests queued for the next call.
+        if not prompts:
+            raise ValueError("generate() needs at least one prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if any(not list(p) for p in prompts):
+            raise ValueError("empty prompt: each prompt needs >= 1 token")
         if extra_inputs:
-            batch.update(extra_inputs)
+            for name, arr in extra_inputs.items():
+                if arr.shape[0] != len(prompts):
+                    raise ValueError(
+                        f"extra input {name!r} leading dim {arr.shape[0]} != "
+                        f"len(prompts) {len(prompts)}")
+        t0 = time.perf_counter()
+        rids = [self.submit(p, max_new_tokens, row=i)
+                for i, p in enumerate(prompts)]
+        try:
+            results = self.run(extra_inputs)
+        except Exception:
+            # drop this call's unserved requests — they must not leak into
+            # (and mis-index the extras of) the next call
+            rid_set = set(rids)
+            self._queue = [r for r in self._queue if r.rid not in rid_set]
+            raise
+        self._stats["generate_calls"] += 1
+        self._stats["total_seconds"] += time.perf_counter() - t0
+        return [results[rid] for rid in rids]
 
-        cache = self.model.init_cache(b, plen + max_new_tokens)
-        logits, cache = self._prefill(self.params, batch, cache)
+    # -- one wave: prefill + fused decode + single fetch -----------------
+    def _run_wave(self, wave: List[_Request],
+                  extra_inputs: Optional[Dict[str, jax.Array]],
+                  key: jax.Array) -> None:
+        cfg = self.cfg
+        b = cfg.max_batch
+        # Validate BEFORE admitting: a rejected request must not leak slots.
+        need = max(r.max_new for r in wave)    # real token budget (cache need)
+        width = _bucket_len(need)              # loop bound/buffer, bucketed so
+        #                                        varied max_new shares a compile
+        longest = max(len(r.prompt) for r in wave)
+        plen = _bucket_len(longest)
+        if plen + need > cfg.max_len:
+            plen = longest                     # drop the bucket, not the user
+        if plen + need > cfg.max_len:
+            raise ValueError(
+                f"prompt ({longest}) + max_new ({need}) exceeds "
+                f"max_len ({cfg.max_len})")
+        if extra_inputs and any(r.row is None for r in wave):
+            raise ValueError(
+                "extra_inputs needs every request submitted with row= "
+                "(its index into the extra arrays); generate() does this")
+        for r in wave:
+            self._sched.admit(r)
+        try:
+            self._decode_wave(wave, extra_inputs, key, plen, width)
+        finally:
+            # free slots even when prefill/decode throws — one bad request
+            # must never brick the pool
+            for r in wave:
+                self._sched.evict(r)
 
-        key = jax.random.PRNGKey(cfg.seed)
-        outs = [[] for _ in range(b)]
-        done = np.zeros(b, bool)
-        offset = jnp.int32(plen)
-        cur = self._sample(logits, key)
-        for step in range(max_new_tokens):
-            cur_np = np.asarray(jax.device_get(cur))
-            for i in range(b):
-                if not done[i]:
-                    outs[i].append(int(cur_np[i]))
-                    if cfg.eos_token is not None and cur_np[i] == cfg.eos_token:
-                        done[i] = True
-            if done.all() or step == max_new_tokens - 1:
-                break
-            key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, cur[:, None], cache, offset)
-            offset = offset + 1
-            cur = self._sample(logits, sub)
-        return outs
+    def _decode_wave(self, wave: List[_Request],
+                     extra_inputs: Optional[Dict[str, jax.Array]],
+                     key: jax.Array, plen: int, width: int) -> None:
+        cfg = self.cfg
+        b = cfg.max_batch
+        toks = np.zeros((b, plen), np.int32)
+        kv_start = np.full((b,), plen, np.int32)   # empty slots: fully padded
+        budget = np.zeros((b,), np.int32)
+        for r in wave:
+            toks[r.slot, plen - len(r.prompt):] = r.prompt
+            kv_start[r.slot] = plen - len(r.prompt)
+            budget[r.slot] = r.max_new
+
+        batch = {"tokens": jnp.asarray(toks),
+                 "kv_start": jnp.asarray(kv_start)}
+        if extra_inputs:
+            rows = [r.row for r in wave]
+            slots = [r.slot for r in wave]
+            for name, arr in extra_inputs.items():
+                padded = jnp.zeros((b,) + arr.shape[1:], arr.dtype)
+                batch[name] = padded.at[jnp.asarray(slots)].set(
+                    jnp.asarray(arr)[jnp.asarray(rows)])
+
+        cache = self._ensure_cache()
+        t0 = time.perf_counter()
+        logits0, cache = self._prefill(self.params, batch, cache)
+        if cfg.profile:
+            jax.block_until_ready(logits0)
+        t1 = time.perf_counter()
+
+        if self._loop is None:
+            self._loop = self._build_loop()
+        buf, lens, cache = self._loop(
+            self.params, cache, logits0, key, jnp.asarray(kv_start),
+            jnp.asarray(budget), jnp.int32(plen), width=width)
+        self._cache = cache
+
+        # The ONE host transfer of this wave (== of the whole generate call
+        # when the batch fits the slot pool).
+        buf_h, lens_h = jax.device_get((buf, lens))
+        t2 = time.perf_counter()
+        self._stats["device_transfers"] += 1
+        self._stats["waves"] += 1
+        self._stats["prefill_seconds"] += t1 - t0
+        self._stats["decode_seconds"] += t2 - t1
+
+        for r in wave:
+            n = int(lens_h[r.slot])
+            r.tokens = [int(t) for t in buf_h[r.slot, :n]]
+            self._stats["tokens_generated"] += n
+
+    # -- telemetry -------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """Counters + tuned-tile lookup provenance for the decode path."""
+        from repro.core.registry import GLOBAL_REGISTRY
+        out = dict(self._stats)
+        out["slots"] = self.cfg.max_batch
+        out["slots_admitted"] = self._sched.admitted
+        out["slots_evicted"] = self._sched.evicted
+        out["slot_reuses"] = self._sched.reuses
+        out["decode_tile_lookups"] = self._tile_lookups
+        out["registry_hit_stats"] = dict(GLOBAL_REGISTRY.hit_stats)
+        return out

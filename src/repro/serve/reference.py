@@ -1,0 +1,121 @@
+"""Reference generation loops — correctness oracle and throughput baseline.
+
+``generate_per_prompt`` is the trust anchor for ragged-batch parity tests:
+each prompt runs alone (batch 1, no padding, no masking), so whatever it
+produces is by construction what a request "should" get.
+
+``generate_per_token_sync`` reproduces the seed engine's execution model —
+batched, but with one ``jax.device_get`` per decoded token — and serves as
+the baseline the serving benchmark measures the fused engine against.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def _greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def generate_per_prompt(model: Model, params, prompts: List[List[int]],
+                        max_new_tokens: int, max_len: int = 512,
+                        eos_token: Optional[int] = None,
+                        extra_inputs: Optional[Dict[str, jax.Array]] = None
+                        ) -> List[List[int]]:
+    """Greedy generation, one prompt at a time (batch 1, no padding)."""
+    outs = []
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    for i, prompt in enumerate(prompts):
+        batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+        if extra_inputs:
+            batch.update({k: v[i:i + 1] for k, v in extra_inputs.items()})
+        cache = model.init_cache(1, max_len)
+        logits, cache = prefill(params, batch, cache)
+        offset = jnp.int32(len(prompt))
+        cur = _greedy(logits)
+        toks: List[int] = []
+        for _ in range(max_new_tokens):
+            t = int(jax.device_get(cur)[0])
+            toks.append(t)
+            if eos_token is not None and t == eos_token:
+                break
+            if len(toks) == max_new_tokens:
+                break
+            logits, cache = decode(params, cur[:, None], cache, offset)
+            offset = offset + 1
+            cur = _greedy(logits)
+        outs.append(toks)
+    return outs
+
+
+class PerTokenSyncEngine:
+    """Batched greedy generation with a host sync per token (the seed
+    engine's execution model; prompts must share one length — no ragged
+    handling).  Prefill/decode are jitted once per instance so repeated
+    calls measure steady-state throughput, not compilation."""
+
+    def __init__(self, model: Model, params, max_len: int = 512,
+                 eos_token: Optional[int] = None, profile: bool = False):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.eos_token = eos_token
+        self.profile = profile             # split prefill/decode wall time
+        self.last_prefill_s = 0.0
+        self.last_decode_s = 0.0
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int
+                 ) -> List[List[int]]:
+        plens = {len(p) for p in prompts}
+        if len(plens) != 1:
+            raise ValueError("per-token-sync baseline expects uniform prompt "
+                             f"lengths, got {sorted(plens)}")
+        (plen,) = plens
+        b = len(prompts)
+        t0 = time.perf_counter()
+        cache = self.model.init_cache(b, self.max_len)
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(np.array(prompts, np.int32))},
+            cache)
+        if self.profile:
+            jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+        offset = jnp.int32(plen)
+        cur = _greedy(logits)
+        outs: List[List[int]] = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        for step in range(max_new_tokens):
+            cur_np = np.asarray(jax.device_get(cur))     # the per-token sync
+            for i in range(b):
+                if not done[i]:
+                    outs[i].append(int(cur_np[i]))
+                    if self.eos_token is not None and cur_np[i] == self.eos_token:
+                        done[i] = True
+            if done.all() or step == max_new_tokens - 1:
+                break
+            logits, cache = self._decode(self.params, cur[:, None], cache,
+                                         offset)
+            offset = offset + 1
+            cur = _greedy(logits)
+        self.last_prefill_s = t1 - t0
+        self.last_decode_s = time.perf_counter() - t1
+        return outs
+
+
+def generate_per_token_sync(model: Model, params, prompts: List[List[int]],
+                            max_new_tokens: int, max_len: int = 512,
+                            eos_token: Optional[int] = None
+                            ) -> List[List[int]]:
+    """One-shot convenience wrapper around :class:`PerTokenSyncEngine`."""
+    return PerTokenSyncEngine(model, params, max_len, eos_token
+                              ).generate(prompts, max_new_tokens)

@@ -1,0 +1,203 @@
+"""Device-resident continuous-batching engine: ragged parity, EOS in the
+fused loop, slot reuse, input validation, and the one-host-transfer-per-call
+regression guard."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.catalog import ARCHITECTURES
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig, generate_per_prompt
+
+
+def _build(arch="llama3.2-1b", **serve_kw):
+    cfg = ARCHITECTURES[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    kw = dict(max_batch=3, max_len=64)
+    kw.update(serve_kw)
+    return cfg, model, params, Engine(model, params, ServeConfig(**kw))
+
+
+RAGGED = [[5, 9, 2, 7], [1, 3, 3], [2, 4, 6, 8, 1, 5, 3]]
+
+
+def test_ragged_batch_matches_single_prompt_generation():
+    """Satellite bug: shorter prompts in a ragged batch used to attend to
+    pad tokens.  Now every row decodes exactly what it decodes alone."""
+    cfg, model, params, eng = _build()
+    batched = eng.generate(RAGGED, 5)
+    singles = [eng.generate([p], 5)[0] for p in RAGGED]
+    assert batched == singles
+
+
+def test_ragged_batch_matches_reference_loop():
+    """Parity against the unpadded batch-1 reference loop (no engine code in
+    the oracle path)."""
+    cfg, model, params, eng = _build()
+    batched = eng.generate(RAGGED, 5)
+    oracle = generate_per_prompt(model, params, RAGGED, 5, max_len=64)
+    assert batched == oracle
+
+
+def test_ragged_parity_ssm_and_hybrid():
+    """SSM/hybrid pad-zeroing keeps the recurrent state of short prompts
+    identical to their solo run."""
+    for arch in ("mamba2-130m", "zamba2-2.7b"):
+        cfg, model, params, eng = _build(arch)
+        batched = eng.generate(RAGGED, 4)
+        singles = [eng.generate([p], 4)[0] for p in RAGGED]
+        assert batched == singles, arch
+
+
+def test_eos_stops_inside_fused_loop():
+    cfg, model, params, eng = _build(max_batch=2)
+    # second token of the free-running generation, used as EOS below
+    free = eng.generate([[3, 1, 4]], 6)[0]
+    eos = free[1]
+    eng_eos = Engine(model, params, ServeConfig(max_batch=2, max_len=64,
+                                                eos_token=eos))
+    if free[0] == eos:              # degenerate repeat: stops on first token
+        assert eng_eos.generate([[3, 1, 4]], 6)[0] == free[:1]
+        return
+    out = eng_eos.generate([[3, 1, 4]], 6)[0]
+    assert out == free[:2]          # EOS itself is kept, nothing after it
+    # EOS applies per slot: pair a stopping row with a free-running one
+    outs = eng_eos.generate([[3, 1, 4], [1, 3, 3]], 6)
+    assert outs[0] == free[:2]
+    assert len(outs[1]) in range(1, 7)
+
+
+def test_slot_reuse_across_generate_calls():
+    cfg, model, params, eng = _build()
+    first = eng.generate(RAGGED, 5)
+    second = eng.generate(RAGGED, 5)
+    assert first == second          # stale slot KV never leaks into a rerun
+    st = eng.stats()
+    assert st["cache_allocs"] == 1  # one KV pool for the engine's lifetime
+    assert st["slot_reuses"] >= 3
+    assert st["slots_admitted"] == st["slots_evicted"] == 6
+
+
+def test_more_prompts_than_slots_run_in_waves():
+    cfg, model, params, eng = _build(max_batch=2)
+    prompts = RAGGED + [[9, 9, 1]]
+    outs = eng.generate(prompts, 4)
+    waves = eng.stats()["waves"]
+    assert waves == 2
+    assert eng.stats()["device_transfers"] == waves   # one fetch per wave
+    singles = [eng.generate([p], 4)[0] for p in prompts]
+    assert outs == singles
+
+
+def test_exactly_one_host_transfer_per_generate(monkeypatch):
+    """Regression guard for the tentpole: the decode loop must not sync the
+    host per token — one device_get per generate call."""
+    cfg, model, params, eng = _build()
+    eng.generate(RAGGED, 6)                      # compile outside the count
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda *a, **k: (
+        calls.append(1), real(*a, **k))[1])
+    eng.generate(RAGGED, 6)
+    assert len(calls) == 1
+    calls.clear()
+    eng.generate([[1, 2]], 3)
+    assert len(calls) == 1
+
+
+def test_empty_prompt_and_empty_batch_raise():
+    cfg, model, params, eng = _build()
+    with pytest.raises(ValueError, match="at least one prompt"):
+        eng.generate([], 4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.generate([[1, 2], []], 4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.generate([[1, 2]], 0)
+
+
+def test_overlong_request_raises_without_leaking_slots():
+    cfg, model, params, eng = _build(max_len=16)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.generate([[1] * 12], 8)
+    # the rejected request must not have consumed a slot
+    outs = eng.generate([[1, 2]], 3)
+    assert len(outs[0]) == 3
+
+
+def test_submit_run_queue_api():
+    cfg, model, params, eng = _build(max_batch=2)
+    rids = [eng.submit(p, 4) for p in RAGGED]
+    results = eng.run()
+    assert set(results) == set(rids)
+    assert results[rids[0]] == eng.generate([RAGGED[0]], 4)[0]
+
+
+def test_run_with_extras_requires_rows():
+    cfg, model, params, eng = _build("whisper-large-v3", max_batch=2)
+    extra = {k: jax.numpy.zeros((1,) + sds.shape[1:], sds.dtype)
+             for k, sds in model.extra_inputs(1).items()}
+    eng.submit([1, 2, 3], 2)                 # no row= -> can't index extras
+    with pytest.raises(ValueError, match="row"):
+        eng.run(extra_inputs=extra)
+
+
+def test_engine_stats_surface_tile_provenance():
+    cfg, model, params, eng = _build()
+    eng.generate([[1, 2, 3]], 2)
+    st = eng.stats()
+    lookups = st["decode_tile_lookups"]
+    assert lookups, "decode GEMM shapes were not traced"
+    for shape, info in lookups.items():
+        assert info["source"] in ("exact", "nearest", "generic", "default",
+                                  "fallback")
+        assert "x" in info["tile"]
+    assert st["registry_hit_stats"]
+
+
+def test_first_sample_key_decorrelated_from_loop():
+    """Satellite bug: the first token used to be sampled with the parent
+    PRNG key that the loop then split again, correlating the first two
+    samples.  Pin the fixed key schedule with an oracle: the first token
+    must come from a fresh split, not from the wave key itself."""
+    cfg, model, params, eng = _build(temperature=1.5, max_batch=1)
+    out = eng.generate([[1, 2, 3, 4]], 1)[0]
+    # oracle: replicate the engine's padding (bucket 8, pad token 0) and
+    # key schedule (seed key -> per-wave split -> pre-sample split)
+    batch = {"tokens": jnp.asarray([[0, 0, 0, 0, 1, 2, 3, 4]], jnp.int32),
+             "kv_start": jnp.asarray([4], jnp.int32)}
+    logits, _ = jax.jit(model.prefill)(params, batch, model.init_cache(1, 64))
+    _, wave_key = jax.random.split(jax.random.PRNGKey(0))
+    _, sub = jax.random.split(wave_key)
+    expected = int(jax.random.categorical(sub, logits / 1.5, axis=-1)[0])
+    buggy = int(jax.random.categorical(wave_key, logits / 1.5, axis=-1)[0])
+    assert out[0] == expected
+    assert expected != buggy        # the regression is distinguishable
+    # same seed -> deterministic across engines
+    cfg2, model2, params2, eng2 = _build(temperature=1.5, max_batch=1)
+    assert eng2.generate([[1, 2, 3, 4]], 1)[0] == out
+
+
+def test_failed_call_frees_slots_and_queue():
+    """A request that dies mid-wave (here: whisper without its required
+    encoder_embeds) must neither leak its KV slot nor leave queued requests
+    behind for the next call."""
+    cfg, model, params, eng = _build("whisper-large-v3", max_batch=1)
+    with pytest.raises(KeyError):
+        eng.generate([[1, 2, 3]], 2)
+    extra = {k: jnp.zeros((1,) + sds.shape[1:], sds.dtype)
+             for k, sds in model.extra_inputs(1).items()}
+    outs = eng.generate([[1, 2, 3]], 2, extra_inputs=extra)
+    assert len(outs[0]) == 2
+    st = eng.stats()
+    assert st["slots_admitted"] == st["slots_evicted"]
+
+
+def test_varied_max_new_shares_one_decode_compile():
+    """max_new is bucketed before becoming the loop's static width, so
+    near-miss budgets don't each pay a full while_loop compile — and the
+    bucket must not change the tokens produced."""
+    cfg, model, params, eng = _build()
+    a = eng.generate(RAGGED, 5)
+    b = eng.generate(RAGGED, 6)     # same bucket (8) as 5
+    assert [x[:5] for x in b] == a  # shared prefix: bucketing is invisible

@@ -183,6 +183,24 @@ def test_lookup_tier_ordering_exact_beats_nearest_beats_generic():
     assert far.config == TileConfig(64, 128, 128)
 
 
+def test_nearest_lookup_bucketed_per_hardware_and_dtype():
+    """Nearest-shape resolution only scans its own (hardware, dtype) bucket:
+    a perfect-distance entry under another hardware or dtype must not win
+    (and hot decode lookups never pay for other backends' entries)."""
+    reg = TileRegistry()
+    reg.put(TileConfig(256, 256, 256), "host-cpu", jnp.bfloat16, 512, 512, 512)
+    reg.put(TileConfig(512, 512, 512), "tpu-v5e", jnp.float32, 512, 512, 512)
+    # same shape, wrong hardware/dtype -> falls through to the default tier
+    res = reg.lookup("tpu-v5e", jnp.bfloat16, 512, 512, 500)
+    assert res.source == "default"
+    # entries land in their own buckets and round-trip through entries()
+    reg.put(TileConfig(128, 256, 256), "tpu-v5e", jnp.bfloat16, 512, 512, 512)
+    res = reg.lookup("tpu-v5e", jnp.bfloat16, 512, 512, 500)
+    assert res.source == "nearest"
+    assert res.config == TileConfig(128, 256, 256)
+    assert len(reg.entries()) == 3
+
+
 # ---------------------------------------------------------------------------
 # Guided search
 # ---------------------------------------------------------------------------
