@@ -1,0 +1,117 @@
+"""Attention-op edition of the paper's tuning sweeps (Figs. 3/4 for flash).
+
+The paper's methodology applied to the second kernel family of the tuning
+framework: fix an attention problem (sq, skv, head_dim), sweep the
+(bq, bk) block space under the VMEM feasibility predicate, keep the
+best-of-repeats per candidate, and report the per-(hardware, dtype) optimum
+— plus the guided search's evaluated/total fraction, exactly as for GEMM.
+
+Backends: tpu-v5e (analytic flash cost model — the TARGET hardware, this
+container is CPU-only) and host-measured pallas-interpret (small problems).
+
+``run(smoke=True)`` shrinks every problem so the whole suite finishes in
+seconds — the CI fast tier runs it and uploads ``BENCH_attention_tuning.json``
+as a trajectory artifact next to the GEMM and serving benches.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import (FLASH_INTERPRET_SPACE, HOST_CPU, SEARCH_EXHAUSTIVE,
+                        SEARCH_GUIDED, TPU_V5E, sweep_flash_attention)
+from repro.core.cost_model import flash_cost
+from repro.core.tile_config import FlashAttentionConfig
+
+S_LONG = 8192          # long-prefill sequence
+S_MED = 2048
+S_SMOKE = 256
+HEAD_DIM = 128
+
+
+def tune_tpu_model(s: int = S_LONG, d: int = HEAD_DIM,
+                   dtype=jnp.bfloat16) -> List[tuple]:
+    """Figs. 3/4 analogue for flash attention via the cost model."""
+    rows = []
+    res = sweep_flash_attention(s, s, d, dtype=dtype, mode="model",
+                                search=SEARCH_EXHAUSTIVE, hardware=TPU_V5E,
+                                record=False)
+    for p in sorted(res.points, key=lambda p: p.seconds):
+        rows.append((f"attn_tune/tpu-v5e/{jnp.dtype(dtype).name}/S{s}/"
+                     f"{p.config.label}", p.seconds * 1e6, p.gflops))
+    return rows
+
+
+def guided_vs_exhaustive(s: int = S_LONG, d: int = HEAD_DIM,
+                         dtype=jnp.bfloat16) -> List[tuple]:
+    """Guided-search check for the attention op: fraction evaluated plus a
+    winner-match verdict against the exhaustive sweep (ranking drift gate)."""
+    kw = dict(dtype=dtype, mode="model", hardware=TPU_V5E, record=False)
+    guided = sweep_flash_attention(s, s, d, search=SEARCH_GUIDED, **kw)
+    full = sweep_flash_attention(s, s, d, search=SEARCH_EXHAUSTIVE, **kw)
+    frac = guided.evaluated / max(guided.candidates_total, 1)
+    if guided.best.config == full.best.config:
+        verdict = "winner-match"
+    else:
+        verdict = f"winner-off-{guided.best.seconds / full.best.seconds:.3f}x"
+    return [(f"attn_tune_guided/tpu-v5e/S{s}/"
+             f"eval{guided.evaluated}of{guided.candidates_total}/{verdict}",
+             guided.best.seconds * 1e6, frac)]
+
+
+def bq_intensity_curve(s: int = S_LONG, d: int = HEAD_DIM,
+                       dtype=jnp.bfloat16) -> List[tuple]:
+    """The attention Eq.-7 analogue: doubling bq halves the K/V re-reads,
+    so modelled HBM bytes fall until the VMEM cliff."""
+    rows = []
+    for bq in (64, 128, 256, 512):
+        cfg = FlashAttentionConfig(bq=bq, bk=512)
+        if not cfg.fits(TPU_V5E, d, dtype):
+            continue
+        c = flash_cost(s, s, d, cfg, TPU_V5E, dtype)
+        rows.append((f"attn_intensity/tpu-v5e/bq{bq}/S{s}",
+                     c.total_s * 1e6, c.arithmetic_intensity))
+    return rows
+
+
+def tune_host_measured(s: int = 64, d: int = 16, repeats: int = 2):
+    """Measured wall-clock sweep on this host (pallas-interpret, tiny S)."""
+    res = sweep_flash_attention(s, s, d, dtype=jnp.float32, mode="measure",
+                                space=FLASH_INTERPRET_SPACE, hardware=HOST_CPU,
+                                repeats=repeats, record=False)
+    rows = []
+    for p in sorted(res.points, key=lambda p: p.seconds)[:5]:
+        rows.append((f"attn_tune/host-interpret/S{s}/{p.config.label}",
+                     p.seconds * 1e6, p.gflops))
+    return rows
+
+
+def tab4_optima(sizes=(S_LONG, S_MED), d: int = HEAD_DIM):
+    """Tab. 4 analogue: per-(hardware, dtype, S) optimum flash blocks."""
+    rows = []
+    for dtype in (jnp.bfloat16, jnp.float32):
+        for s in sizes:
+            res = sweep_flash_attention(s, s, d, dtype=dtype, mode="model",
+                                        hardware=TPU_V5E, record=False)
+            b = res.best
+            rows.append((f"attn_tab4/tpu-v5e/{jnp.dtype(dtype).name}/S{s}/"
+                         f"best={b.config.label}", b.seconds * 1e6, b.gflops))
+    return rows
+
+
+def run(smoke: bool = False) -> List[tuple]:
+    rows = []
+    if smoke:
+        rows += tune_tpu_model(S_SMOKE)[:6]
+        rows += guided_vs_exhaustive(S_SMOKE)
+        rows += bq_intensity_curve(S_SMOKE)
+        rows += tune_host_measured(32, repeats=1)
+        rows += tab4_optima(sizes=(S_SMOKE,))
+        return rows
+    rows += tune_tpu_model()[:6]
+    rows += guided_vs_exhaustive()
+    rows += bq_intensity_curve()
+    rows += tune_host_measured()
+    rows += tab4_optima()
+    return rows

@@ -20,8 +20,8 @@ import json
 import sys
 import traceback
 
-SUITES = ["gemm_tuning", "gemm_scaling", "relative_peak", "ratio_model",
-          "model_step", "roofline_summary", "serving"]
+SUITES = ["gemm_tuning", "attention_tuning", "gemm_scaling", "relative_peak",
+          "ratio_model", "model_step", "roofline_summary", "serving"]
 
 
 def _run_suite(suite: str, smoke: bool):

@@ -1,17 +1,19 @@
 """The paper's single-source thesis, live: tune GEMM tiles for two different
 'architectures' (hardware targets) from the SAME kernel source, persist the
-tuned table (Tab. 4), then serve a model whose matmuls consume it.
+tuned table (Tab. 4), tune the flash-attention op's (bq, bk) blocks the same
+way, then serve a model whose matmuls AND prefill attention consume them.
 
 Run: PYTHONPATH=src python examples/autotune_and_serve.py
 """
+import dataclasses
 import tempfile
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import (GLOBAL_REGISTRY, HOST_CPU, INTERPRET_SPACE, TPU_V5E,
-                        TileRegistry, capture_gemm_shapes, sweep_gemm,
-                        tune_model_gemms)
+                        TileRegistry, capture_gemm_shapes,
+                        sweep_flash_attention, sweep_gemm, tune_model_gemms)
 from repro.configs.catalog import get_config
 from repro.models import build_model
 from repro.serve import Engine, ServeConfig
@@ -34,7 +36,8 @@ with tempfile.NamedTemporaryFile(suffix=".json") as f:
 # Both the training forward AND the serving decode step are traced; tuning
 # the decode shapes into the process-global registry is what turns the
 # engine's per-token GEMM lookups below into 'exact' hits.
-cfg = get_config("llama3.2-1b").reduced()
+cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                          attention_impl="flash")
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 with capture_gemm_shapes() as shapes:
@@ -51,6 +54,14 @@ tuned = tune_model_gemms(uniq, dtype=cfg.dtype, registry=GLOBAL_REGISTRY)
 for shape, cfg_t in list(tuned.items())[:4]:
     print(f"[tune]   {str(shape):24s} -> {cfg_t.label}")
 
+# ...and the flash-attention op, same machinery: the engine buckets these
+# prompts to a prefill length of 8, so tune that exact (sq, skv, head_dim)
+# problem for an 'exact' provenance hit below.
+hd = cfg.resolved_head_dim
+res = sweep_flash_attention(8, 8, hd, dtype=cfg.dtype,
+                            registry=GLOBAL_REGISTRY)
+print(f"[tune]   flash (8, 8, {hd})         -> {res.best.config.label}")
+
 # -- 3. serve with the tuned registry in ambient context ---------------------
 # The engine is the production-shaped consumer: a fixed pool of KV-cache
 # slots, ragged prompts (left-pad + masking), and a fused device-resident
@@ -66,4 +77,7 @@ print(f"[serve] {int(st['tokens_generated'])} tokens in "
       f"transfer(s), {int(st['slot_reuses'])} slot reuse(s)")
 for shape, info in (st["decode_tile_lookups"] or {}).items():
     print(f"[serve]   decode GEMM {shape:>14s} -> tile {info['tile']} "
+          f"({info['source']})")
+for shape, info in (st["prefill_flash_lookups"] or {}).items():
+    print(f"[serve]   prefill flash {shape:>12s} -> blocks {info['tile']} "
           f"({info['source']})")

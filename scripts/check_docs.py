@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Docs gate: fail on broken intra-repo markdown links.
+
+    python scripts/check_docs.py            # check every tracked *.md
+    python scripts/check_docs.py README.md  # check specific files
+
+Scans ``[text](target)`` links in the repo's markdown files and verifies
+that every *relative* target resolves to an existing file or directory
+(anchors and external http(s)/mailto links are skipped).  Run by the CI
+``docs`` job next to ``make_experiments_md.py --check``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+# [text](target) with no nested parens in the target; images included
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def md_files():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        for f in sorted(files):
+            if f.endswith(".md"):
+                yield os.path.join(root, f)
+
+
+def check_file(path: str):
+    """Yields (lineno, target, resolved) for every broken link in ``path``."""
+    with open(path, encoding="utf-8") as f:
+        in_code = False
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+            if in_code:
+                continue
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    yield lineno, target, resolved
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    paths = ([os.path.join(REPO, a) for a in args] if args
+             else list(md_files()))
+    broken = 0
+    checked = 0
+    for path in paths:
+        checked += 1
+        for lineno, target, resolved in check_file(path):
+            broken += 1
+            rel = os.path.relpath(path, REPO)
+            print(f"[docs] BROKEN {rel}:{lineno}: ({target}) -> {resolved}")
+    print(f"[docs] checked {checked} markdown file(s), {broken} broken "
+          f"intra-repo link(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

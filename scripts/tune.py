@@ -1,16 +1,20 @@
 #!/usr/bin/env python
-"""Autotuning CLI: produce, inspect, and ship the tuning database.
+"""Autotuning CLI: produce, inspect, and ship the multi-op tuning database.
 
-    python scripts/tune.py sweep  --hardware tpu-v5e --mode model
+    python scripts/tune.py sweep  --hardware tpu-v5e --mode model --op all
+    python scripts/tune.py sweep  --hardware tpu-v5e --op flash_attention
     python scripts/tune.py sweep  --hardware host-cpu --mode measure --shapes 64x64x64
     python scripts/tune.py show   --hardware tpu-v5e
     python scripts/tune.py diff   --hardware tpu-v5e
     python scripts/tune.py export --hardware tpu-v5e --format markdown
 
 ``sweep`` writes/updates ``tuned/<hardware>.json`` (the committed paper-Tab.-4
-artifact that serve/train/matmul auto-load); ``show``/``export`` render it as
-a markdown table; ``diff`` re-runs a model-mode sweep over the DB's problems
-and reports entries whose winner changed (e.g. after a cost-model edit).
+artifact that serve/train/matmul auto-load); ``--op`` selects the kernel
+family — ``gemm`` shapes are ``MxKxN``, ``flash_attention`` shapes are
+``SQxSKVxD`` (query len x KV len x head dim), ``all`` sweeps both default
+problem sets.  ``show``/``export`` render the DB as per-op markdown tables;
+``diff`` re-runs a model-mode sweep over the DB's problems and reports
+entries whose winner changed (e.g. after a cost-model edit).
 """
 from __future__ import annotations
 
@@ -25,7 +29,9 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import tuner, tuning_db  # noqa: E402
 from repro.core.hardware import get_hardware  # noqa: E402
-from repro.core.tile_config import INTERPRET_SPACE  # noqa: E402
+from repro.core.registry import OP_FLASH_ATTENTION, OP_GEMM  # noqa: E402
+from repro.core.tile_config import (  # noqa: E402
+    FLASH_INTERPRET_SPACE, INTERPRET_SPACE)
 
 # Default problem set: the paper's tuning/control sizes plus the GEMM shapes a
 # transformer block actually issues at serving/training scale (batchxseq rows,
@@ -42,6 +48,18 @@ DEFAULT_SHAPES = [
     (512, 4096, 4096),       # short-batch decode rows
     (8192, 4096, 4096),      # long-prefill rows
 ]
+# Flash-attention default problems: (sq, skv, d) over the serve engine's
+# power-of-two prefill buckets and the model zoo's head dims, so engine
+# prefill lookups land on exact or near neighbours.
+DEFAULT_FLASH_SHAPES = [
+    (128, 128, 64), (128, 128, 128),
+    (512, 512, 64), (512, 512, 128),
+    (1024, 1024, 64), (1024, 1024, 128),
+    (2048, 2048, 128),
+    (4096, 4096, 128),
+    (8192, 8192, 128),       # long-prefill rows
+]
+DEFAULT_FLASH_MEASURE_SHAPES = [(64, 64, 16), (128, 128, 32)]
 DTYPES = {"bfloat16": jnp.bfloat16, "bf16": jnp.bfloat16,
           "float32": jnp.float32, "f32": jnp.float32}
 
@@ -63,15 +81,43 @@ def _db_path(args) -> str:
     return tuning_db.db_path(args.hardware, args.db_dir)
 
 
+def _sweep_one_op(op, hw, shapes, dtypes, args):
+    """Run one op's sweep over its problem list; returns SweepResults."""
+    results = []
+    for dt_name in dtypes:
+        dtype = DTYPES[dt_name]
+        for shape in shapes:
+            if op == OP_GEMM:
+                m, k, n = shape
+                res = tuner.sweep_gemm(
+                    m, k, n, dtype=dtype, hardware=hw, mode=args.mode,
+                    search=args.search, top_k=args.top_k,
+                    space=INTERPRET_SPACE if args.mode == "measure" else None,
+                    repeats=args.repeats, record=False)
+            else:
+                sq, skv, d = shape
+                res = tuner.sweep_flash_attention(
+                    sq, skv, d, dtype=dtype, hardware=hw, mode=args.mode,
+                    search=args.search, top_k=args.top_k,
+                    space=(FLASH_INTERPRET_SPACE if args.mode == "measure"
+                           else None),
+                    repeats=args.repeats, record=False)
+            results.append(res)
+            b = res.best
+            label = "x".join(str(s) for s in shape)
+            print(f"[sweep] {hw.name} {op} {res.dtype:8s} {label}: "
+                  f"best {b.config.label} ({b.gflops:.0f} GFLOP/s, "
+                  f"{res.evaluated}/{res.candidates_total} evaluated, "
+                  f"{res.pruned} pruned, {res.search})")
+    return results
+
+
 def cmd_sweep(args) -> int:
     hw = get_hardware(args.hardware)
-    shapes = _parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    ops = [OP_GEMM, OP_FLASH_ATTENTION] if args.op == "all" else [args.op]
+    if args.shapes and len(ops) > 1:
+        raise SystemExit("error: --shapes requires a single --op")
     dtypes = [args.dtype] if args.dtype else ["bfloat16", "float32"]
-    space = INTERPRET_SPACE if args.mode == "measure" else None
-    if args.mode == "measure":
-        # wall-clock sweeps need host-sized problems unless overridden
-        if not args.shapes:
-            shapes = [(64, 64, 64), (128, 128, 128), (256, 256, 256)]
 
     path = _db_path(args)
     db = tuning_db.TuningDB(hw.name)
@@ -79,19 +125,16 @@ def cmd_sweep(args) -> int:
         db.merge(tuning_db.TuningDB.from_file(path))
 
     results = []
-    for dt_name in dtypes:
-        dtype = DTYPES[dt_name]
-        for (m, k, n) in shapes:
-            res = tuner.sweep_gemm(
-                m, k, n, dtype=dtype, hardware=hw, mode=args.mode,
-                search=args.search, top_k=args.top_k, space=space,
-                repeats=args.repeats, record=False)
-            results.append(res)
-            b = res.best
-            print(f"[sweep] {hw.name} {res.dtype:8s} {m}x{k}x{n}: "
-                  f"best {b.config.label} ({b.gflops:.0f} GFLOP/s, "
-                  f"{res.evaluated}/{res.candidates_total} evaluated, "
-                  f"{res.pruned} pruned, {res.search})")
+    for op in ops:
+        if args.shapes:
+            shapes = _parse_shapes(args.shapes)
+        elif args.mode == "measure":
+            # wall-clock sweeps need host-sized problems unless overridden
+            shapes = ([(64, 64, 64), (128, 128, 128), (256, 256, 256)]
+                      if op == OP_GEMM else DEFAULT_FLASH_MEASURE_SHAPES)
+        else:
+            shapes = DEFAULT_SHAPES if op == OP_GEMM else DEFAULT_FLASH_SHAPES
+        results += _sweep_one_op(op, hw, shapes, dtypes, args)
     db.merge(tuning_db.db_from_sweeps(hw.name, results))
     db.save(path)
     print(f"[sweep] wrote {len(db)} entries -> {path}")
@@ -120,13 +163,17 @@ def cmd_diff(args) -> int:
     for rec in db.records():
         if rec.source != "model":
             continue  # measured entries are ground truth; don't second-guess
-        res = tuner.sweep_gemm(rec.m, rec.k, rec.n, dtype=DTYPES[rec.dtype],
-                               hardware=hw, mode="model", search=args.search,
-                               top_k=args.top_k, record=False)
+        kw = dict(dtype=DTYPES[rec.dtype], hardware=hw, mode="model",
+                  search=args.search, top_k=args.top_k, record=False)
+        if rec.op == OP_GEMM:
+            res = tuner.sweep_gemm(rec.m, rec.k, rec.n, **kw)
+        else:
+            res = tuner.sweep_flash_attention(*rec.shape, **kw)
         new = res.best.config
         if new != rec.config:
             changed += 1
-            print(f"[diff] {rec.dtype} {rec.m}x{rec.k}x{rec.n}: "
+            shape = "x".join(str(s) for s in rec.shape)
+            print(f"[diff] {rec.op} {rec.dtype} {shape}: "
                   f"{rec.config.label} -> {new.label}")
     print(f"[diff] {changed} of {len(db)} entries changed vs {path}")
     return 1 if changed and args.check else 0
@@ -160,12 +207,18 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("sweep", help="tune problems and update the DB")
     common(p)
+    p.add_argument("--op", choices=[OP_GEMM, OP_FLASH_ATTENTION, "all"],
+                   default=OP_GEMM,
+                   help="kernel family to tune (shapes: gemm=MxKxN, "
+                        "flash_attention=SQxSKVxD)")
     p.add_argument("--mode", choices=["model", "measure"], default="model")
     p.add_argument("--search", choices=[tuner.SEARCH_GUIDED,
                                         tuner.SEARCH_EXHAUSTIVE],
                    default=tuner.SEARCH_GUIDED)
     p.add_argument("--top-k", type=int, default=tuner.DEFAULT_TOP_K)
-    p.add_argument("--shapes", default=None, help="comma list of MxKxN")
+    p.add_argument("--shapes", default=None,
+                   help="comma list of shapes (gemm: MxKxN; "
+                        "flash_attention: SQxSKVxD)")
     p.add_argument("--dtype", choices=sorted(DTYPES), default=None)
     p.add_argument("--repeats", type=int, default=3)
     p.add_argument("--fresh", action="store_true",

@@ -30,6 +30,21 @@ for name, cfg in ARCHITECTURES.items():
 print(f"tuning {len(all_shapes)} unique shapes (guided, tpu-v5e, bf16)...")
 results = sweep_shapes(sorted(all_shapes), dtype=jnp.bfloat16, record=False)
 
+# Flash-attention problems: every head dim the zoo uses x the serve engine's
+# power-of-two prefill buckets (+ train_4k), so op="flash_attention" lookups
+# land on exact or near neighbours.
+from repro.core import sweep_flash_attention  # noqa: E402
+
+head_dims = sorted({cfg.resolved_head_dim for cfg in ARCHITECTURES.values()
+                    if cfg.num_heads})
+flash_problems = sorted({(s, s, d) for d in head_dims
+                         for s in (128, 512, 1024, 2048, 4096)})
+print(f"tuning {len(flash_problems)} flash-attention problems "
+      f"(head dims {head_dims})...")
+results += [sweep_flash_attention(sq, skv, d, dtype=jnp.bfloat16,
+                                  record=False)
+            for (sq, skv, d) in flash_problems]
+
 path = tuning_db.db_path("tpu-v5e")
 db = tuning_db.TuningDB("tpu-v5e")
 if os.path.exists(path):

@@ -54,8 +54,11 @@ class ModelConfig:
     logit_chunk: int = 0            # >0 => chunked loss over tokens
     attn_p_dtype: str = "float32"   # attention probabilities for the PV matmul
                                     # ("bfloat16" halves the dominant f32 buffer)
-    attention_impl: str = "chunked"  # chunked (jnp) | flash (Pallas kernel,
-                                     # train/no-cache paths; scores stay in VMEM)
+    attention_impl: str = "chunked"  # chunked (jnp) | flash (tuned Pallas
+                                     # kernel for causal self-attention with
+                                     # >1 query: training forwards AND serving
+                                     # prefill, ragged rows included; decode/
+                                     # cross-attn fall back, logged once)
     kv_quant: bool = False           # int8 KV cache (per-token-head scales):
                                      # halves the decode memory term
 

@@ -1,16 +1,26 @@
-"""Core: the paper's contribution — single-source tunable GEMM machinery."""
+"""Core: the paper's contribution — single-source tunable kernel machinery.
+
+One architecture-agnostic kernel source per op (GEMM, flash attention), with
+every tuning knob — block sizes, backend, dtype policy — carried *outside*
+the kernel in an op-keyed registry fed by a persistent tuning database.
+"""
+from repro.core.attention_api import flash_attention  # noqa: F401
 from repro.core.gemm_api import (  # noqa: F401
     ExecutionContext, capture_gemm_shapes, current_hardware, einsum,
     execution_context, matmul,
 )
 from repro.core.hardware import HARDWARE, HOST_CPU, TPU_V5E, get_hardware  # noqa: F401
 from repro.core.registry import (  # noqa: F401
-    GLOBAL_REGISTRY, LookupResult, TileRegistry, get_tile_config,
+    GLOBAL_REGISTRY, KNOWN_OPS, LookupResult, OP_FLASH_ATTENTION, OP_GEMM,
+    TileRegistry, get_tile_config,
 )
-from repro.core.tile_config import INTERPRET_SPACE, TileConfig, TuningSpace, square  # noqa: F401
+from repro.core.tile_config import (  # noqa: F401
+    FLASH_INTERPRET_SPACE, FlashAttentionConfig, FlashTuningSpace,
+    INTERPRET_SPACE, TileConfig, TuningSpace, square,
+)
 from repro.core.tuner import (  # noqa: F401
-    SEARCH_EXHAUSTIVE, SEARCH_GUIDED, SweepResult, sweep_gemm, sweep_shapes,
-    tune_model_gemms,
+    SEARCH_EXHAUSTIVE, SEARCH_GUIDED, SweepResult, sweep_flash_attention,
+    sweep_gemm, sweep_shapes, tune_model_gemms,
 )
 from repro.core.tuning_db import (  # noqa: F401
     TuningDB, TuningDBError, TuningRecord, db_from_sweeps, load_all,

@@ -1,0 +1,78 @@
+"""The single public flash-attention entry point — models route here.
+
+Mirror of :mod:`repro.core.gemm_api` for the attention kernel family: the
+algorithm (``kernels/flash_attention.py``) is written once; *which (bq, bk)
+blocks it runs with* is decided here from the ambient
+:class:`~repro.core.gemm_api.ExecutionContext` plus the op-keyed tuning
+registry.  Model code never mentions block sizes.
+
+Lookup key: ``op="flash_attention"``, shape ``(sq, skv, head_dim)`` — the
+same exact → nearest → generic → default resolution order as GEMM tiles,
+fed by the committed ``tuned/<hardware>.json`` databases.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.gemm_api import _ctx
+from repro.core.registry import GLOBAL_REGISTRY, LookupResult, OP_FLASH_ATTENTION
+
+
+def flash_tile_lookup(hardware: str, dtype, sq: int, skv: int,
+                      d: int) -> LookupResult:
+    """Resolve tuned (bq, bk) blocks for one flash-attention problem.
+
+    Thin, named wrapper over the registry so telemetry consumers (e.g.
+    ``Engine.stats()``) and the model path share one lookup definition.
+    """
+    return GLOBAL_REGISTRY.lookup_op(OP_FLASH_ATTENTION, hardware, dtype,
+                                     (sq, skv, d))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    kv_start: Optional[jax.Array] = None,
+                    bq: Optional[int] = None, bk: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Tuned flash attention over GQA-layout operands.
+
+    Args:
+      q: queries, shape ``(B, S, H, d)``.
+      k, v: keys/values, shape ``(B, S_kv, KV, d)`` with ``KV`` dividing
+        ``H`` (grouped-query attention; KV heads are expanded internally).
+      causal: apply the causal mask (queries aligned to the *end* of the KV
+        sequence when ``S != S_kv``).
+      kv_start: optional ``(B,)`` int32 — first valid KV column per row for
+        left-padded ragged batches; earlier columns are masked out of every
+        softmax.
+      bq, bk: explicit block-size overrides.  When omitted (the normal
+        case), the blocks come from the tuning registry's
+        ``op="flash_attention"`` entry for ``(S, S_kv, d)`` on the ambient
+        context's hardware — exact tuned shape first, then nearest-shape,
+        generic, and per-hardware default tiers.
+      interpret: force/disable Pallas interpret mode; default: interpret
+        everywhere except on real TPU backends.
+
+    Returns:
+      Attention output, shape ``(B, S, H, d)``, in ``q.dtype``.
+
+    Example::
+
+        from repro.core import execution_context, flash_attention
+        with execution_context(hardware="tpu-v5e"):
+            out = flash_attention(q, k, v, causal=True)   # tuned (bq, bk)
+    """
+    from repro.kernels import flash_attention as fa_kernel
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    if bq is None or bk is None:
+        ctx = _ctx()
+        cfg = flash_tile_lookup(ctx.hardware, q.dtype, sq, skv, d).config
+        bq = bq if bq is not None else cfg.bq
+        bk = bk if bk is not None else cfg.bk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return fa_kernel.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                                     interpret=interpret, kv_start=kv_start)

@@ -103,3 +103,47 @@ def gemm_cost(m: int, k: int, n: int, cfg: TileConfig,
 def ratio_model(n: int, t: int) -> float:
     """Paper Eq. 7 verbatim: R(N, T) = 2NT / (2N + T)."""
     return 2.0 * n * t / (2.0 * n + t)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (op = "flash_attention")
+# ---------------------------------------------------------------------------
+
+def flash_cost(sq: int, skv: int, d: int, cfg: "FlashAttentionConfig",
+               hw: HardwareSpec = TPU_V5E, in_dtype=jnp.bfloat16,
+               causal: bool = True) -> GemmCost:
+    """Analytic cost of one (batch*head) slice of the flash-attention kernel.
+
+    Same three-resource roofline as :func:`gemm_cost`, with the kernel's
+    actual traffic pattern: per q-block the full K and V stream through VMEM
+    once, so HBM reads scale with ``ceil(sq / bq)`` — bigger bq => higher
+    arithmetic intensity, the attention edition of paper Eq. 7.  Causal
+    masking halves the useful score/PV work but not the streamed K/V bytes
+    (the kernel visits every block; skipped math is modelled as utilization).
+    """
+    from repro.core.tile_config import FlashAttentionConfig  # cycle guard
+    assert isinstance(cfg, FlashAttentionConfig), cfg
+    s_in = jnp.dtype(in_dtype).itemsize
+
+    gq, gk = _ceil_div(sq, cfg.bq), _ceil_div(skv, cfg.bk)
+    sq_p, skv_p = gq * cfg.bq, gk * cfg.bk
+
+    # Two matmuls per (q-block, kv-block): QK^T and PV -> 4 * sq * skv * d.
+    issued_flops = 4 * sq_p * skv_p * d
+    useful = 4 * sq * skv * d
+    if causal:
+        useful //= 2                       # lower-triangular half only
+
+    peak = hw.peak_for(in_dtype)
+    util_k = min(cfg.bk, hw.mxu_dim) / hw.mxu_dim
+    util_d = min(d, hw.mxu_dim) / hw.mxu_dim
+    compute_s = issued_flops / (peak * max(util_k * util_d, 0.05))
+
+    # HBM: q read once, o written once, K and V re-read once per q-block.
+    hbm_bytes = (sq_p * d + sq_p * d) * s_in + gq * (2 * skv_p * d) * s_in
+    hbm_s = hbm_bytes / hw.hbm_bandwidth
+
+    overhead_s = gq * gk * GRID_STEP_OVERHEAD_S
+
+    return GemmCost(compute_s=compute_s, hbm_s=hbm_s, overhead_s=overhead_s,
+                    flops=useful, hbm_bytes=hbm_bytes)

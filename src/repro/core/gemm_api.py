@@ -109,11 +109,33 @@ _dot_bf16_reduce.defvjp(_dot_bf16_reduce_fwd, _dot_bf16_reduce_bwd)
 
 def matmul(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
            activation: Optional[str] = None, out_dtype=None) -> jax.Array:
-    """``x @ w`` for x of shape (..., K) and w of shape (K, N).
+    """``x @ w`` — the only matmul primitive the model zoo uses.
 
-    The only matmul primitive the model zoo uses.  Fused epilogues (bias,
-    activation) ride on the kernel's epilogue so the single source covers
-    the model's hot paths, not just plain GEMM.
+    Leading dims of ``x`` are flattened into the GEMM's M dimension; the
+    execution backend and the (bm, bk, bn) tile config are resolved from the
+    ambient :class:`ExecutionContext` and the op-keyed tuning registry
+    (``op="gemm"``, exact tuned shape first, then nearest-shape, generic and
+    per-hardware default tiers).  Fused epilogues (bias, activation) ride on
+    the kernel's epilogue so the single source covers the model's hot paths,
+    not just plain GEMM.
+
+    Args:
+      x: left operand, shape ``(..., K)``.
+      w: right operand, shape ``(K, N)``.
+      bias: optional ``(N,)`` bias added in f32 before the activation.
+      activation: optional fused activation: ``"relu" | "gelu" | "silu" |
+        "tanh"``.
+      out_dtype: output dtype (default: the operands' result type).
+
+    Returns:
+      ``x @ w`` with shape ``(..., N)``, accumulated in float32.
+
+    Example::
+
+        from repro.core import execution_context, matmul
+        with execution_context(backend="pallas-interpret",
+                               hardware="tpu-v5e"):
+            y = matmul(x, w, activation="silu")   # tuned tiles, fused SiLU
     """
     ctx = _ctx()
     backend = ctx.resolve_backend()

@@ -2,22 +2,31 @@
 
 The paper stores its tuned tile size in a C++ trait specialized per
 accelerator (Listing 1.1); here the same role is played by a thread-safe
-registry keyed by (hardware, dtype) with per-problem-shape tuned entries.
-Kernel/model code only ever asks :func:`get_tile_config` (via
-``gemm_api.matmul``) — tuning never touches implementation code.
+registry keyed by **(op, hardware, dtype)** with per-problem-shape tuned
+entries.  ``op`` names the kernel family — ``"gemm"`` entries hold
+:class:`~repro.core.tile_config.TileConfig` blocks, ``"flash_attention"``
+entries hold :class:`~repro.core.tile_config.FlashAttentionConfig` blocks —
+so one registry (and one committed DB file per hardware target) serves every
+tunable kernel.  Kernel/model code only ever asks :func:`get_tile_config`
+(via ``gemm_api.matmul``) or :func:`repro.core.attention_api.flash_attention`
+— tuning never touches implementation code.
 
-Resolution order for ``get(hardware, dtype, m, k, n)``:
+Resolution order for ``lookup_op(op, hardware, dtype, shape)``:
 
-1. **exact**   — a tuned entry for this precise (m, k, n);
+1. **exact**   — a tuned entry for this precise shape;
 2. **nearest** — the tuned entry for the closest shape (log-space distance
-   over the three dims, capped by ``NEAREST_MAX_LOG2_DIST``), so untuned
-   problems reuse a neighbour's tile instead of the static default;
-3. **generic** — a shape-agnostic tuned entry for (hardware, dtype);
-4. **default** — the built-in per-backend starting point (the paper's
+   over the dims, capped by ``NEAREST_MAX_LOG2_DIST``), so untuned
+   problems reuse a neighbour's blocks instead of the static default;
+3. **generic** — a shape-agnostic tuned entry for (op, hardware, dtype);
+4. **default** — the built-in per-(op, backend) starting point (the paper's
    ``#define GPU_ELEM_NUM`` analogue, its ~20%-of-peak baseline);
-5. **fallback** — 128x128x128.
+5. **fallback** — the op's hardware-agnostic last resort.
 
-Persistence lives in :mod:`repro.core.tuning_db` (versioned
+Nearest-shape scans never cross ops, hardware, or dtypes: exact entries are
+bucketed by the full (op, hardware, dtype) key, so a flash-attention lookup
+can never be satisfied by (or pay a scan over) GEMM entries.
+
+Persistence lives in :mod:`repro.core.tuning_db` (versioned, op-keyed
 ``tuned/<hardware>.json`` files, the paper's Tab. 4 as committed artifacts);
 the process-global registry lazily loads every DB file at first lookup, so a
 fresh process — serving, training, or a bare ``matmul`` call — picks up
@@ -31,65 +40,114 @@ import json
 import math
 import os
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
-from repro.core.tile_config import TileConfig
+from repro.core.tile_config import FlashAttentionConfig, TileConfig
+
+#: op names — the kernel families the tuning framework knows about
+OP_GEMM = "gemm"
+OP_FLASH_ATTENTION = "flash_attention"
+KNOWN_OPS = (OP_GEMM, OP_FLASH_ATTENTION)
+
+AnyConfig = Union[TileConfig, FlashAttentionConfig]
 
 # ---------------------------------------------------------------------------
 # Defaults (the #define GPU_ELEM_NUM / OMP_ELEM_NUM analogue): reasonable
-# untuned starting points per backend & dtype — the paper's "20% of peak"
-# baseline configuration.
+# untuned starting points per (op, backend, dtype) — the paper's "20% of
+# peak" baseline configuration.
 # ---------------------------------------------------------------------------
-_DEFAULTS: Dict[Tuple[str, str], TileConfig] = {
-    ("tpu-v5e", "bfloat16"): TileConfig(128, 128, 128),
-    ("tpu-v5e", "float32"): TileConfig(128, 128, 128),
-    ("host-cpu", "bfloat16"): TileConfig(32, 32, 32),
-    ("host-cpu", "float32"): TileConfig(32, 32, 32),
+_DEFAULTS: Dict[Tuple[str, str, str], AnyConfig] = {
+    (OP_GEMM, "tpu-v5e", "bfloat16"): TileConfig(128, 128, 128),
+    (OP_GEMM, "tpu-v5e", "float32"): TileConfig(128, 128, 128),
+    (OP_GEMM, "host-cpu", "bfloat16"): TileConfig(32, 32, 32),
+    (OP_GEMM, "host-cpu", "float32"): TileConfig(32, 32, 32),
+    (OP_FLASH_ATTENTION, "tpu-v5e", "bfloat16"): FlashAttentionConfig(128, 128),
+    (OP_FLASH_ATTENTION, "tpu-v5e", "float32"): FlashAttentionConfig(128, 128),
+    (OP_FLASH_ATTENTION, "host-cpu", "bfloat16"): FlashAttentionConfig(32, 32),
+    (OP_FLASH_ATTENTION, "host-cpu", "float32"): FlashAttentionConfig(32, 32),
 }
-_FALLBACK = TileConfig(128, 128, 128)
+_FALLBACK: Dict[str, AnyConfig] = {
+    OP_GEMM: TileConfig(128, 128, 128),
+    OP_FLASH_ATTENTION: FlashAttentionConfig(128, 128),
+}
+
+#: per-op config class — used to rebuild configs from persisted block tuples
+CONFIG_CLASS = {OP_GEMM: TileConfig, OP_FLASH_ATTENTION: FlashAttentionConfig}
+
+#: length of each op's problem-shape tuple: gemm (m, k, n); flash
+#: (sq, skv, head_dim).  The block-tuple length is derived from the config
+#: class's fields — together with CONFIG_CLASS/_DEFAULTS/_FALLBACK this is
+#: the one place to extend when adding an op.
+OP_SHAPE_LEN = {OP_GEMM: 3, OP_FLASH_ATTENTION: 3}
+OP_BLOCK_LEN = {op: len(dataclasses.fields(cls))
+                for op, cls in CONFIG_CLASS.items()}
+
+
+def config_from_block(op: str, block) -> AnyConfig:
+    """Rebuild the op's config object from a flat block-size tuple."""
+    try:
+        cls = CONFIG_CLASS[op]
+    except KeyError:
+        raise ValueError(f"unknown op {op!r}; known: {sorted(CONFIG_CLASS)}")
+    return cls(*block)
+
+
+def block_of(cfg: AnyConfig) -> Tuple[int, ...]:
+    """Flatten a config object to its persistable block-size tuple."""
+    return tuple(dataclasses.astuple(cfg))
+
 
 #: nearest-shape matches beyond this cumulative |log2| distance are rejected
-#: (e.g. 6.0 allows a combined size ratio of 2**6 across the three dims).
+#: (e.g. 6.0 allows a combined size ratio of 2**6 across the dims).
 NEAREST_MAX_LOG2_DIST = 6.0
 
 
-def _key_str(hardware: str, dtype, m=None, k=None, n=None) -> str:
+def _key_str(op: str, hardware: str, dtype, shape=None) -> str:
     dt = jnp.dtype(dtype).name
-    if m is None:
-        return f"{hardware}/{dt}"
-    return f"{hardware}/{dt}/{m}x{k}x{n}"
+    prefix = f"{hardware}/{dt}" if op == OP_GEMM else f"{op}:{hardware}/{dt}"
+    if shape is None:
+        return prefix
+    return prefix + "/" + "x".join(str(s) for s in shape)
 
 
-def _shape_dist(a: Tuple[int, int, int], b: Tuple[int, int, int]) -> float:
+def _shape_dist(a: Tuple[int, ...], b: Tuple[int, ...]) -> float:
+    if len(a) != len(b):
+        return float("inf")
     return sum(abs(math.log2(max(x, 1)) - math.log2(max(y, 1)))
                for x, y in zip(a, b))
 
 
 @dataclasses.dataclass(frozen=True)
 class LookupResult:
-    """A resolved tile config plus where it came from (for tests/telemetry)."""
-    config: TileConfig
+    """A resolved config plus where it came from (for tests/telemetry)."""
+    config: AnyConfig
     source: str                                  # exact|nearest|generic|default|fallback
-    matched_shape: Optional[Tuple[int, int, int]] = None
+    matched_shape: Optional[Tuple[int, ...]] = None
     distance: float = 0.0
+    op: str = OP_GEMM
 
 
 class TileRegistry:
-    """Thread-safe tuned-parameter store with nearest-shape fallback."""
+    """Thread-safe tuned-parameter store with nearest-shape fallback.
+
+    GEMM callers keep the original (hardware, dtype, m, k, n) API
+    (:meth:`get`, :meth:`put`, :meth:`lookup`); other ops use the op-keyed
+    :meth:`get_op`, :meth:`put_op`, :meth:`lookup_op`.
+    """
 
     def __init__(self, path: Optional[str] = None, *, autoload: bool = False):
         self._lock = threading.Lock()
         self._autoload_lock = threading.Lock()
         self._stats_lock = threading.Lock()
-        # shape-specific entries, bucketed by (hw, dtype) so hot lookups
-        # (e.g. decode-shape GEMMs) never scan other hardware's entries:
-        # (hw, dtype) -> {(m, k, n) -> TileConfig}
-        self._exact: Dict[Tuple[str, str],
-                          Dict[Tuple[int, int, int], TileConfig]] = {}
-        # shape-agnostic entries: (hw, dtype) -> TileConfig
-        self._generic: Dict[Tuple[str, str], TileConfig] = {}
+        # shape-specific entries, bucketed by (op, hw, dtype) so hot lookups
+        # (e.g. decode-shape GEMMs) never scan other ops' or hardware's
+        # entries:  (op, hw, dtype) -> {shape tuple -> config}
+        self._exact: Dict[Tuple[str, str, str],
+                          Dict[Tuple[int, ...], AnyConfig]] = {}
+        # shape-agnostic entries: (op, hw, dtype) -> config
+        self._generic: Dict[Tuple[str, str, str], AnyConfig] = {}
         self._path = path
         self._autoload = autoload
         self._autoload_done = False
@@ -116,46 +174,52 @@ class TileRegistry:
         self._autoload_done = True
 
     # -- lookup --------------------------------------------------------
-    def lookup(self, hardware: str, dtype, m: int = None, k: int = None,
-               n: int = None) -> LookupResult:
-        """Resolve a tile config, reporting which tier satisfied it."""
+    def lookup_op(self, op: str, hardware: str, dtype,
+                  shape: Optional[Tuple[int, ...]] = None) -> LookupResult:
+        """Resolve a config for ``op``, reporting which tier satisfied it."""
         self._ensure_autoloaded()
         dt = jnp.dtype(dtype).name
-        has_shape = m is not None and k is not None and n is not None
         with self._lock:
-            if has_shape:
-                bucket = self._exact.get((hardware, dt))
-                hit = bucket.get((m, k, n)) if bucket else None
+            if shape is not None:
+                bucket = self._exact.get((op, hardware, dt))
+                hit = bucket.get(tuple(shape)) if bucket else None
                 if hit is not None:
-                    res = LookupResult(hit, "exact", (m, k, n))
+                    res = LookupResult(hit, "exact", tuple(shape), op=op)
                     return self._count(res)
-                near = self._nearest_locked(hardware, dt, (m, k, n))
+                near = self._nearest_locked(op, hardware, dt, tuple(shape))
                 if near is not None:
                     return self._count(near)
-            hit = self._generic.get((hardware, dt))
+            hit = self._generic.get((op, hardware, dt))
             if hit is not None:
-                return self._count(LookupResult(hit, "generic"))
-        cfg = _DEFAULTS.get((hardware, dt))
+                return self._count(LookupResult(hit, "generic", op=op))
+        cfg = _DEFAULTS.get((op, hardware, dt))
         if cfg is not None:
-            return self._count(LookupResult(cfg, "default"))
-        return self._count(LookupResult(_FALLBACK, "fallback"))
+            return self._count(LookupResult(cfg, "default", op=op))
+        return self._count(LookupResult(_FALLBACK[op], "fallback", op=op))
 
-    def _nearest_locked(self, hardware: str, dt: str,
-                        shape: Tuple[int, int, int]) -> Optional[LookupResult]:
-        # Scans only this (hardware, dtype) bucket — other backends' tuned
-        # shapes never slow down (or leak into) this lookup.
+    def lookup(self, hardware: str, dtype, m: int = None, k: int = None,
+               n: int = None) -> LookupResult:
+        """GEMM-compat wrapper: resolve a :class:`TileConfig` for (m, k, n)."""
+        has_shape = m is not None and k is not None and n is not None
+        return self.lookup_op(OP_GEMM, hardware, dtype,
+                              (m, k, n) if has_shape else None)
+
+    def _nearest_locked(self, op: str, hardware: str, dt: str,
+                        shape: Tuple[int, ...]) -> Optional[LookupResult]:
+        # Scans only this (op, hardware, dtype) bucket — other ops' and
+        # backends' tuned shapes never slow down (or leak into) this lookup.
         best = None
-        for (m, k, n), cfg in self._exact.get((hardware, dt), {}).items():
-            dist = _shape_dist(shape, (m, k, n))
+        for mshape, cfg in self._exact.get((op, hardware, dt), {}).items():
+            dist = _shape_dist(shape, mshape)
             if dist > NEAREST_MAX_LOG2_DIST:
                 continue
-            cand = (dist, (m, k, n), cfg)
+            cand = (dist, mshape, cfg)
             if best is None or cand[:2] < best[:2]:  # distance, then shape
                 best = cand
         if best is None:
             return None
         dist, mshape, cfg = best
-        return LookupResult(cfg, "nearest", mshape, dist)
+        return LookupResult(cfg, "nearest", mshape, dist, op=op)
 
     def _count(self, res: LookupResult) -> LookupResult:
         # leaf-level lock of its own: callers may or may not hold self._lock
@@ -163,21 +227,35 @@ class TileRegistry:
             self.hit_stats[res.source] = self.hit_stats.get(res.source, 0) + 1
         return res
 
+    def get_op(self, op: str, hardware: str, dtype,
+               shape: Optional[Tuple[int, ...]] = None) -> AnyConfig:
+        return self.lookup_op(op, hardware, dtype, shape).config
+
     def get(self, hardware: str, dtype, m: int = None, k: int = None,
             n: int = None) -> TileConfig:
         return self.lookup(hardware, dtype, m, k, n).config
 
     # -- update --------------------------------------------------------
-    def put(self, cfg: TileConfig, hardware: str, dtype, m: int = None,
-            k: int = None, n: int = None) -> None:
+    def put_op(self, op: str, cfg: AnyConfig, hardware: str, dtype,
+               shape: Optional[Tuple[int, ...]] = None) -> None:
+        if op not in CONFIG_CLASS:
+            raise ValueError(f"unknown op {op!r}; known: {sorted(CONFIG_CLASS)}")
         dt = jnp.dtype(dtype).name
         with self._lock:
-            if m is None or k is None or n is None:
-                # partial shapes are meaningless for nearest-distance math;
-                # anything short of a full (m, k, n) is a generic entry
-                self._generic[(hardware, dt)] = cfg
+            if shape is None:
+                self._generic[(op, hardware, dt)] = cfg
             else:
-                self._exact.setdefault((hardware, dt), {})[(m, k, n)] = cfg
+                self._exact.setdefault((op, hardware, dt), {})[tuple(shape)] = cfg
+
+    def put(self, cfg: TileConfig, hardware: str, dtype, m: int = None,
+            k: int = None, n: int = None) -> None:
+        """GEMM-compat wrapper around :meth:`put_op`."""
+        if m is None or k is None or n is None:
+            # partial shapes are meaningless for nearest-distance math;
+            # anything short of a full (m, k, n) is a generic entry
+            self.put_op(OP_GEMM, cfg, hardware, dtype, None)
+        else:
+            self.put_op(OP_GEMM, cfg, hardware, dtype, (m, k, n))
 
     def clear(self) -> None:
         with self._lock:
@@ -190,7 +268,7 @@ class TileRegistry:
         path = path or self._path
         if not path:
             raise ValueError("no path for registry save")
-        blob = {k: [c.bm, c.bk, c.bn] for k, c in self.entries().items()}
+        blob = {k: list(block_of(c)) for k, c in self.entries().items()}
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(blob, f, indent=1, sort_keys=True)
@@ -200,23 +278,26 @@ class TileRegistry:
         with open(path) as f:
             blob = json.load(f)
         with self._lock:
-            for key, (bm, bk, bn) in blob.items():
+            for key, block in blob.items():
+                op = OP_GEMM
+                if ":" in key:
+                    op, key = key.split(":", 1)
+                cfg = config_from_block(op, block)
                 parts = key.split("/")
-                cfg = TileConfig(bm=bm, bk=bk, bn=bn)
                 if len(parts) == 2:
-                    self._generic[(parts[0], parts[1])] = cfg
+                    self._generic[(op, parts[0], parts[1])] = cfg
                 else:
-                    m, k, n = (int(x) for x in parts[2].split("x"))
+                    shape = tuple(int(x) for x in parts[2].split("x"))
                     self._exact.setdefault(
-                        (parts[0], parts[1]), {})[(m, k, n)] = cfg
+                        (op, parts[0], parts[1]), {})[shape] = cfg
 
-    def entries(self) -> Dict[str, TileConfig]:
+    def entries(self) -> Dict[str, AnyConfig]:
         with self._lock:
-            out = {_key_str(hw, dt): cfg
-                   for (hw, dt), cfg in self._generic.items()}
-            out.update({_key_str(hw, dt, m, k, n): cfg
-                        for (hw, dt), bucket in self._exact.items()
-                        for (m, k, n), cfg in bucket.items()})
+            out = {_key_str(op, hw, dt): cfg
+                   for (op, hw, dt), cfg in self._generic.items()}
+            out.update({_key_str(op, hw, dt, shape): cfg
+                        for (op, hw, dt), bucket in self._exact.items()
+                        for shape, cfg in bucket.items()})
         return out
 
 

@@ -6,6 +6,14 @@ MXU/VPU alignment constraints.  ``TuningSpace`` enumerates the candidates the
 tuner sweeps — the analogue of the paper's power-of-two T/thread sweep
 (Figs. 3/4) — with the cache-capacity constraint K(S,T) <= cache (Eq. 5)
 made *explicit* against the VMEM budget instead of discovered empirically.
+
+The same pattern generalizes beyond GEMM: ``FlashAttentionConfig`` carries
+the flash-attention kernel's (bq, bk) block sizes — the knobs of the online
+softmax's "bigger tile => fewer K/V re-reads" trade-off (the attention
+analogue of the paper's Eq. 7) — and ``FlashTuningSpace`` enumerates its
+candidates under the same VMEM feasibility predicate.  Every config class
+here is hashable, orderable, and static-argument safe; kernels receive them
+from the registry, never define them.
 """
 from __future__ import annotations
 
@@ -120,4 +128,89 @@ INTERPRET_SPACE = TuningSpace(
     bm_candidates=(8, 16, 32, 64),
     bk_candidates=(16, 32, 64),
     bn_candidates=(16, 32, 64),
+)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (op = "flash_attention")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FlashAttentionConfig:
+    """Block sizes of the single-source flash-attention kernel.
+
+    ``bq`` tiles the query rows, ``bk`` tiles the KV columns the online
+    softmax streams over.  Per (bq x d) output tile the kernel re-reads the
+    full K/V once, so HBM traffic falls as ~1/bq until the q/k/v/accumulator
+    working set hits VMEM — the attention edition of paper Eq. 7.
+    """
+    bq: int = 128
+    bk: int = 128
+
+    def vmem_working_set(self, d: int, in_dtype, *, gqa_groups: int = 1) -> int:
+        """Bytes resident per grid step: q + k + v tiles in the input dtype
+        plus the f32 (m, l, acc) scratch carried across KV blocks."""
+        s_in = jnp.dtype(in_dtype).itemsize
+        del gqa_groups  # KV heads are expanded before the kernel; no sharing
+        return (self.bq * d + 2 * self.bk * d) * s_in \
+            + (self.bq * (d + 2)) * 4
+
+    def fits(self, hw: HardwareSpec, d: int, in_dtype,
+             headroom: float = 0.9) -> bool:
+        # Pallas double-buffers the streamed k/v windows.
+        s_in = jnp.dtype(in_dtype).itemsize
+        need = (2 * (self.bq * d + 2 * self.bk * d)) * s_in \
+            + self.bq * (d + 2) * 4
+        return need <= hw.vmem_bytes * headroom
+
+    def aligned(self, hw: HardwareSpec, in_dtype) -> bool:
+        """Score tile (bq, bk): minor dim multiple of the lane count, rows a
+        multiple of the dtype sublane count (as for the GEMM tiles)."""
+        sub = hw.sublane * (2 if jnp.dtype(in_dtype).itemsize == 2 else 1)
+        return self.bk % hw.mxu_dim == 0 and self.bq % sub == 0
+
+    @property
+    def label(self) -> str:
+        return f"{self.bq}x{self.bk}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashTuningSpace:
+    """Candidate (bq, bk) enumeration for the flash-attention sweep."""
+    bq_candidates: Sequence[int] = (64, 128, 256, 512)
+    bk_candidates: Sequence[int] = (128, 256, 512, 1024)
+
+    def candidates(self, hw: HardwareSpec = TPU_V5E, in_dtype=jnp.bfloat16,
+                   sq: int = None, skv: int = None, d: int = 128,
+                   ) -> Iterator[FlashAttentionConfig]:
+        """Yield feasible, aligned candidates; blocks larger than the
+        (padded) sequence are skipped, as for GEMM."""
+        combos = list(itertools.product(self.bq_candidates, self.bk_candidates))
+
+        def feasible(cap_dims: bool):
+            for bq, bk in combos:
+                cfg = FlashAttentionConfig(bq=bq, bk=bk)
+                if not cfg.aligned(hw, in_dtype):
+                    continue
+                if not cfg.fits(hw, d, in_dtype):
+                    continue
+                if cap_dims:
+                    if sq is not None and bq > max(sq, hw.sublane):
+                        continue
+                    if skv is not None and bk > max(skv, hw.mxu_dim):
+                        continue
+                yield cfg
+
+        out = list(feasible(cap_dims=True))
+        if not out:
+            # sequence shorter than every candidate block: the kernel pads,
+            # so the smallest feasible blocks are the right space
+            out = sorted(set(feasible(cap_dims=False)))[:8]
+        yield from out
+
+
+# Interpret-mode (host-measured) flash space: tiny sequences, loose alignment.
+FLASH_INTERPRET_SPACE = FlashTuningSpace(
+    bq_candidates=(8, 16, 32, 64),
+    bk_candidates=(16, 32, 64),
 )

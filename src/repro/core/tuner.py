@@ -39,8 +39,10 @@ import jax.numpy as jnp
 
 from repro.core import cost_model
 from repro.core.hardware import HardwareSpec, TPU_V5E, HOST_CPU
-from repro.core.registry import GLOBAL_REGISTRY, TileRegistry
-from repro.core.tile_config import TileConfig, TuningSpace
+from repro.core.registry import (GLOBAL_REGISTRY, OP_FLASH_ATTENTION, OP_GEMM,
+                                 TileRegistry)
+from repro.core.tile_config import (FlashAttentionConfig, FlashTuningSpace,
+                                    TileConfig, TuningSpace)
 from repro.kernels import ops
 
 SEARCH_GUIDED = "guided"
@@ -51,7 +53,7 @@ DEFAULT_PRUNE_FACTOR = 2.0
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    config: TileConfig
+    config: object                    # TileConfig | FlashAttentionConfig
     seconds: float
     gflops: float
     source: str  # "model" | "measure" | "measure-pruned"
@@ -59,16 +61,28 @@ class SweepPoint:
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    m: int
-    k: int
-    n: int
+    shape: Tuple[int, ...]            # gemm: (m, k, n); flash: (sq, skv, d)
     dtype: str
     hardware: str
     points: List[SweepPoint]          # evaluated candidates only
+    op: str = OP_GEMM
     search: str = SEARCH_EXHAUSTIVE
     candidates_total: int = 0         # size of the feasible space
     evaluated: int = 0                # candidates actually scored
     pruned: int = 0                   # measured candidates cut short
+
+    # GEMM conveniences (match the pre-multi-op result API)
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.shape[2]
 
     @property
     def best(self) -> SweepPoint:
@@ -159,13 +173,99 @@ def sweep_gemm(
             points.append(SweepPoint(cfg, secs, flops / secs / 1e9,
                                      "measure-pruned" if was_pruned else "measure"))
 
-    result = SweepResult(m=m, k=k, n=n, dtype=jnp.dtype(dtype).name,
+    result = SweepResult(shape=(m, k, n), op=OP_GEMM,
+                         dtype=jnp.dtype(dtype).name,
                          hardware=hardware.name, points=points, search=search,
                          candidates_total=len(cands), evaluated=len(points),
                          pruned=pruned)
     if record:
         reg = registry or GLOBAL_REGISTRY
         reg.put(result.best.config, hardware.name, dtype, m, k, n)
+    return result
+
+
+def sweep_flash_attention(
+    sq: int, skv: int, d: int,
+    *,
+    dtype=jnp.float32,
+    causal: bool = True,
+    space: Optional[FlashTuningSpace] = None,
+    hardware: HardwareSpec = TPU_V5E,
+    mode: str = "model",
+    search: str = SEARCH_GUIDED,
+    top_k: int = DEFAULT_TOP_K,
+    prune_factor: float = DEFAULT_PRUNE_FACTOR,
+    batch_heads: int = 4,
+    repeats: int = 3,
+    registry: Optional[TileRegistry] = None,
+    record: bool = True,
+) -> SweepResult:
+    """Tune (bq, bk) blocks for one flash-attention problem.
+
+    Same guided-search machinery as :func:`sweep_gemm` — cost-model ranking
+    (:func:`repro.core.cost_model.flash_cost`), top-K evaluation, measured
+    pruning — applied to the op="flash_attention" candidate space.  The
+    problem is identified by ``(sq, skv, d)`` (query length, KV length, head
+    dim); ``batch_heads`` only sizes the measured-mode operands.
+    """
+    if mode not in ("model", "measure"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if search not in (SEARCH_GUIDED, SEARCH_EXHAUSTIVE):
+        raise ValueError(f"unknown search {search!r}")
+
+    space = space or FlashTuningSpace()
+    # QK^T + PV: 4 * sq * skv * d per (batch, head) slice, halved if causal.
+    flops = 4.0 * sq * skv * d * (0.5 if causal else 1.0)
+    cands = list(space.candidates(hardware, dtype, sq=sq, skv=skv, d=d))
+    if not cands:
+        raise ValueError(
+            f"flash tuning space empty for ({sq},{skv},{d}) "
+            f"{jnp.dtype(dtype).name} on {hardware.name}")
+
+    ranked = [(cfg, cost_model.flash_cost(sq, skv, d, cfg, hardware, dtype,
+                                          causal=causal).total_s)
+              for cfg in cands]
+    ranked.sort(key=lambda cs: (cs[1], cs[0]))
+    selected = ranked[:max(1, top_k)] if search == SEARCH_GUIDED else ranked
+
+    points: List[SweepPoint] = []
+    pruned = 0
+    if mode == "model":
+        for cfg, secs in selected:
+            points.append(SweepPoint(cfg, secs, flops / secs / 1e9, "model"))
+    else:
+        from repro.kernels.flash_attention import flash_attention
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, sq, batch_heads, d),
+                              jnp.float32).astype(dtype)
+        k = jax.random.normal(ks[1], (1, skv, batch_heads, d),
+                              jnp.float32).astype(dtype)
+        v = jax.random.normal(ks[2], (1, skv, batch_heads, d),
+                              jnp.float32).astype(dtype)
+        best_so_far = float("inf")
+        for cfg, _est in selected:
+            fn = jax.jit(lambda q, k, v, c=cfg: flash_attention(
+                q, k, v, causal=causal, bq=c.bq, bk=c.bk, interpret=True))
+            prune_above = (best_so_far * prune_factor
+                           if search == SEARCH_GUIDED and best_so_far < float("inf")
+                           else None)
+            secs, was_pruned = _measure(lambda: fn(q, k, v), repeats,
+                                        prune_above)
+            pruned += was_pruned
+            best_so_far = min(best_so_far, secs)
+            points.append(SweepPoint(
+                cfg, secs, batch_heads * flops / secs / 1e9,
+                "measure-pruned" if was_pruned else "measure"))
+
+    result = SweepResult(shape=(sq, skv, d), op=OP_FLASH_ATTENTION,
+                         dtype=jnp.dtype(dtype).name,
+                         hardware=hardware.name, points=points, search=search,
+                         candidates_total=len(cands), evaluated=len(points),
+                         pruned=pruned)
+    if record:
+        reg = registry or GLOBAL_REGISTRY
+        reg.put_op(OP_FLASH_ATTENTION, result.best.config, hardware.name,
+                   dtype, (sq, skv, d))
     return result
 
 

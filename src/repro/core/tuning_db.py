@@ -1,22 +1,34 @@
-"""Versioned, persistent tuning database — the paper's Tab. 4 as an artifact.
+"""Versioned, persistent, multi-op tuning database — paper Tab. 4 as an artifact.
 
 The paper's central claim is that tuned parameters live *outside* the
 single-source kernel.  ``TuningDB`` is where they live between processes:
 one schema-checked JSON file per hardware target under ``tuned/<hardware>.json``
 (committed to the repo, like the paper's printed table), each entry recording
-the winning :class:`~repro.core.tile_config.TileConfig` for one
-(dtype, m, k, n) problem together with how it was obtained (``model`` cost
-estimate or wall-clock ``measure``) and the score that won.
+the winning block config for one ``(op, dtype, shape)`` problem together with
+how it was obtained (``model`` cost estimate or wall-clock ``measure``) and
+the score that won.
 
-Producers: ``scripts/tune.py sweep`` and :func:`repro.core.tuner.sweep_gemm`.
-Consumers: :class:`repro.core.registry.TileRegistry` auto-loads every DB file
-at first lookup (so ``gemm_api.matmul`` picks tuned tiles up in any fresh
-process), and ``launch/serve.py`` / ``launch/train.py`` load it explicitly at
-startup and report what they found.
+Ops and their shapes/blocks (see ``docs/TUNING.md`` for the full schema):
 
-Schema versioning: files carry ``schema_version``; :func:`TuningDB.from_file`
-raises :class:`TuningDBError` on a mismatch so a stale artifact can never be
-silently misread (auto-load downgrades that to a warning and skips the file).
+* ``gemm``            — shape ``(m, k, n)``, block ``(bm, bk, bn)``
+  (:class:`~repro.core.tile_config.TileConfig`);
+* ``flash_attention`` — shape ``(sq, skv, d)``, block ``(bq, bk)``
+  (:class:`~repro.core.tile_config.FlashAttentionConfig`).
+
+Producers: ``scripts/tune.py sweep`` and the sweep functions in
+:mod:`repro.core.tuner`.  Consumers: :class:`repro.core.registry.TileRegistry`
+auto-loads every DB file at first lookup (so ``gemm_api.matmul`` and
+``attention_api.flash_attention`` pick tuned blocks up in any fresh process),
+and ``launch/serve.py`` / ``launch/train.py`` load it explicitly at startup
+and report what they found.
+
+Schema versioning: files carry ``schema_version``.  The current, op-keyed
+schema is version ``3``; the legacy GEMM-only schemas (versions 1-2, entries
+carrying flat ``m/k/n/bm/bk/bn`` fields and no ``op``) still **load** — every
+legacy entry migrates to ``op="gemm"`` on read and is rewritten op-keyed on
+the next save.  Versions *newer* than the library raise
+:class:`TuningDBError` so a stale library can never silently misread a future
+artifact (auto-load downgrades that to a warning and skips the file).
 """
 from __future__ import annotations
 
@@ -27,15 +39,18 @@ import os
 import warnings
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.core.tile_config import TileConfig
+from repro.core.registry import (OP_BLOCK_LEN, OP_GEMM, OP_SHAPE_LEN,
+                                 block_of, config_from_block)
 
-SCHEMA_VERSION = 2
+#: current on-disk schema: op-keyed entries (shape/block tuples + "op")
+SCHEMA_VERSION = 3
+#: older schemas that still load, migrating every entry to op="gemm"
+LEGACY_SCHEMA_VERSIONS = (1, 2)
 
 #: env var overriding where tuned DBs are read from / written to
 TUNED_DIR_ENV = "REPRO_TUNED_DIR"
 #: env var disabling registry auto-load entirely (set to any non-empty value)
 DISABLE_ENV = "REPRO_DISABLE_TUNED"
-
 
 class TuningDBError(ValueError):
     """Raised for schema-version mismatches and malformed DB files."""
@@ -43,44 +58,119 @@ class TuningDBError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class TuningRecord:
-    """One tuned winner: problem identity + winning tile + provenance."""
+    """One tuned winner: (op, problem identity) + winning block + provenance.
+
+    ``shape``/``block`` semantics are op-specific (module docstring); the
+    :attr:`config` property rebuilds the typed config object.  GEMM records
+    keep convenience accessors (``m``/``k``/``n``) and a :meth:`gemm`
+    constructor matching the pre-op-keyed API.
+    """
     dtype: str
-    m: int
-    k: int
-    n: int
-    bm: int
-    bk: int
-    bn: int
-    source: str = "model"        # "model" | "measure"
+    shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    op: str = OP_GEMM
+    source: str = "model"        # "model" | "measure" | "measure-pruned"
     seconds: float = 0.0         # winning score (estimated or measured)
     gflops: float = 0.0
 
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(x) for x in self.shape))
+        object.__setattr__(self, "block", tuple(int(x) for x in self.block))
+        want_s = OP_SHAPE_LEN.get(self.op)
+        want_b = OP_BLOCK_LEN.get(self.op)
+        if want_s is None:
+            raise TuningDBError(f"unknown op {self.op!r}")
+        if len(self.shape) != want_s or len(self.block) != want_b:
+            raise TuningDBError(
+                f"op {self.op!r} expects shape[{want_s}]/block[{want_b}], "
+                f"got {self.shape}/{self.block}")
+
+    @classmethod
+    def gemm(cls, dtype: str, m: int, k: int, n: int,
+             bm: int, bk: int, bn: int, **kw) -> "TuningRecord":
+        """Legacy-style GEMM constructor (pre-op-keyed call signature)."""
+        return cls(dtype=dtype, shape=(m, k, n), block=(bm, bk, bn),
+                   op=OP_GEMM, **kw)
+
+    # -- GEMM conveniences (match the pre-v3 record API) ----------------
     @property
-    def shape(self) -> Tuple[int, int, int]:
-        return (self.m, self.k, self.n)
+    def m(self) -> int:
+        return self.shape[0]
 
     @property
-    def config(self) -> TileConfig:
-        return TileConfig(bm=self.bm, bk=self.bk, bn=self.bn)
+    def k(self) -> int:
+        return self.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.shape[2]
+
+    @property
+    def bm(self) -> int:
+        return self.block[0]
+
+    @property
+    def bk(self) -> int:
+        return self.block[1]
+
+    @property
+    def bn(self) -> int:
+        return self.block[2]
+
+    @property
+    def config(self):
+        """The typed config object (TileConfig / FlashAttentionConfig)."""
+        return config_from_block(self.op, self.block)
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        return {"op": self.op, "dtype": self.dtype,
+                "shape": list(self.shape), "block": list(self.block),
+                "source": self.source, "seconds": self.seconds,
+                "gflops": self.gflops}
 
     @classmethod
     def from_json(cls, blob: dict) -> "TuningRecord":
         try:
-            return cls(**{f.name: blob[f.name] for f in dataclasses.fields(cls)
-                          if f.name in blob})
+            if "op" in blob or "shape" in blob:
+                return cls(op=blob.get("op", OP_GEMM), dtype=blob["dtype"],
+                           shape=tuple(blob["shape"]),
+                           block=tuple(blob["block"]),
+                           source=blob.get("source", "model"),
+                           seconds=blob.get("seconds", 0.0),
+                           gflops=blob.get("gflops", 0.0))
+            # legacy (schema <= 2) flat GEMM entry -> migrate to op="gemm"
+            return cls.gemm(blob["dtype"], blob["m"], blob["k"], blob["n"],
+                            blob["bm"], blob["bk"], blob["bn"],
+                            source=blob.get("source", "model"),
+                            seconds=blob.get("seconds", 0.0),
+                            gflops=blob.get("gflops", 0.0))
         except (KeyError, TypeError) as e:
             raise TuningDBError(f"malformed tuning record {blob!r}: {e}") from e
 
 
 class TuningDB:
-    """All tuned winners for one hardware target, persistable as JSON."""
+    """All tuned winners for one hardware target, persistable as JSON.
+
+    Records are keyed by ``(op, dtype, shape)``; merge semantics keep the
+    most trustworthy winner per key (measured > modelled, better-of-measured,
+    latest-of-modelled).
+
+    Example::
+
+        db = TuningDB("tpu-v5e")
+        db.add(TuningRecord.gemm("bfloat16", 4096, 4096, 4096,
+                                 512, 1024, 1024, seconds=8.8e-5))
+        db.add(TuningRecord(op="flash_attention", dtype="bfloat16",
+                            shape=(4096, 4096, 128), block=(512, 1024)))
+        db.save("tuned/tpu-v5e.json")          # schema_version 3
+        db2 = TuningDB.from_file("tuned/tpu-v5e.json")
+        db2.get("bfloat16", 4096, 4096, 4096).config     # TileConfig(512, ...)
+        db2.get_op("flash_attention", "bfloat16", (4096, 4096, 128)).config
+    """
 
     def __init__(self, hardware: str):
         self.hardware = hardware
-        self._records: Dict[Tuple[str, int, int, int], TuningRecord] = {}
+        self._records: Dict[Tuple[str, str, Tuple[int, ...]], TuningRecord] = {}
 
     # -- content -------------------------------------------------------
     #: wall-clock measurements outrank analytic estimates — their "seconds"
@@ -98,7 +188,7 @@ class TuningDB:
           authoritative; keeping a lower stale estimate would pin pre-fix
           winners forever and make ``tune.py diff`` drift unrecoverable.
         """
-        key = (rec.dtype, rec.m, rec.k, rec.n)
+        key = (rec.op, rec.dtype, rec.shape)
         old = self._records.get(key)
         if keep_best and old is not None:
             new_rank = self._SOURCE_RANK.get(rec.source, 0)
@@ -110,11 +200,20 @@ class TuningDB:
                 return
         self._records[key] = rec
 
-    def records(self) -> List[TuningRecord]:
-        return [self._records[k] for k in sorted(self._records)]
+    def records(self, op: Optional[str] = None) -> List[TuningRecord]:
+        keys = sorted(k for k in self._records if op is None or k[0] == op)
+        return [self._records[k] for k in keys]
+
+    def ops(self) -> List[str]:
+        return sorted({k[0] for k in self._records})
+
+    def get_op(self, op: str, dtype: str,
+               shape: Tuple[int, ...]) -> Optional[TuningRecord]:
+        return self._records.get((op, dtype, tuple(shape)))
 
     def get(self, dtype: str, m: int, k: int, n: int) -> Optional[TuningRecord]:
-        return self._records.get((dtype, m, k, n))
+        """GEMM-compat accessor (pre-op-keyed call signature)."""
+        return self.get_op(OP_GEMM, dtype, (m, k, n))
 
     def __len__(self) -> int:
         return len(self._records)
@@ -139,12 +238,15 @@ class TuningDB:
         if not isinstance(blob, dict) or "schema_version" not in blob:
             raise TuningDBError("not a tuning DB (missing schema_version)")
         ver = blob["schema_version"]
-        if ver != SCHEMA_VERSION:
+        if ver != SCHEMA_VERSION and ver not in LEGACY_SCHEMA_VERSIONS:
             raise TuningDBError(
-                f"tuning DB schema_version {ver} != supported {SCHEMA_VERSION}; "
-                f"re-run `python scripts/tune.py sweep` to regenerate")
+                f"tuning DB schema_version {ver} is newer than supported "
+                f"{SCHEMA_VERSION}; upgrade the library or re-run "
+                f"`python scripts/tune.py sweep` to regenerate")
         db = cls(blob.get("hardware", "unknown"))
         for entry in blob.get("entries", []):
+            # legacy entries carry flat m/k/n fields; from_json migrates
+            # them to op="gemm" records transparently
             db.add(TuningRecord.from_json(entry), keep_best=False)
         return db
 
@@ -167,17 +269,24 @@ class TuningDB:
 
     # -- reporting (the literal Tab. 4 rendering) ----------------------
     def markdown(self) -> str:
-        lines = [
-            f"### Tuned tile table — `{self.hardware}` (paper Tab. 4 analogue)",
-            "",
-            "| dtype | m | k | n | best tile (bm x bk x bn) | source | est/meas time | GFLOP/s |",
-            "|---|---|---|---|---|---|---|---|",
-        ]
-        for r in self.records():
-            t = f"{r.seconds * 1e6:.1f} us" if r.seconds else "-"
-            gf = f"{r.gflops:.0f}" if r.gflops else "-"
-            lines.append(f"| {r.dtype} | {r.m} | {r.k} | {r.n} "
-                         f"| {r.bm}x{r.bk}x{r.bn} | {r.source} | {t} | {gf} |")
+        lines = []
+        for op in self.ops() or [OP_GEMM]:
+            if lines:
+                lines.append("")
+            lines += [
+                f"### Tuned {op} table — `{self.hardware}` "
+                f"(paper Tab. 4 analogue)",
+                "",
+                "| dtype | shape | best block | source | est/meas time "
+                "| GFLOP/s |",
+                "|---|---|---|---|---|---|",
+            ]
+            for r in self.records(op):
+                t = f"{r.seconds * 1e6:.1f} us" if r.seconds else "-"
+                gf = f"{r.gflops:.0f}" if r.gflops else "-"
+                shape = "x".join(str(s) for s in r.shape)
+                lines.append(f"| {r.dtype} | {shape} | {r.config.label} "
+                             f"| {r.source} | {t} | {gf} |")
         return "\n".join(lines)
 
 
@@ -214,7 +323,7 @@ def load_into_registry(registry, path: str, *, strict: bool = False) -> int:
         warnings.warn(f"skipping tuning DB {path}: {e}", stacklevel=2)
         return 0
     for rec in db.records():
-        registry.put(rec.config, db.hardware, rec.dtype, rec.m, rec.k, rec.n)
+        registry.put_op(rec.op, rec.config, db.hardware, rec.dtype, rec.shape)
     return len(db)
 
 
@@ -245,12 +354,12 @@ def load_all(registry, tuned_dir: Optional[str] = None, *,
 
 
 def db_from_sweeps(hardware: str, results: Iterable) -> TuningDB:
-    """Build a DB from :class:`repro.core.tuner.SweepResult` objects."""
+    """Build a DB from :class:`repro.core.tuner.SweepResult` objects (any op)."""
     db = TuningDB(hardware)
     for res in results:
         best = res.best
         db.add(TuningRecord(
-            dtype=res.dtype, m=res.m, k=res.k, n=res.n,
-            bm=best.config.bm, bk=best.config.bk, bn=best.config.bn,
+            op=res.op, dtype=res.dtype, shape=res.shape,
+            block=block_of(best.config),
             source=best.source, seconds=best.seconds, gflops=best.gflops))
     return db

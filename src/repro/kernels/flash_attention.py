@@ -8,8 +8,28 @@ the HBM traffic is q + k + v + o — the same "bigger tile => higher arithmetic
 intensity" argument as the paper's Eq. 7, applied to attention.
 
 Single-source discipline as for GEMM: block sizes (bq, bk) arrive from
-outside; the kernel body is architecture-agnostic.  Validated in interpret
-mode against ``ref.attention_ref`` (tests/test_flash_attention.py).
+outside — callers get tuned values via
+:func:`repro.core.attention_api.flash_attention`, which resolves the
+op="flash_attention" entry of the tuning registry; this module never reads
+tuning state.  The kernel body is architecture-agnostic.
+
+Ragged / prefill support (the serve-engine path):
+
+* ``kv_start`` — optional per-batch-row ``(B,)`` int32 giving the first
+  *valid* KV column of a left-padded ragged batch.  Columns before
+  ``kv_start[b]`` are excluded from every softmax, matching the chunked
+  reference path (`models/layers._sdpa_chunked`) and the engine's
+  right-aligned prompt layout.
+* Non-divisible sequence lengths — ``S % bq != 0`` or ``S_kv % bk != 0`` is
+  handled by **left-padding** q/k/v up to the next block multiple and
+  widening ``kv_start`` by the pad, so padding reuses exactly the ragged
+  masking logic; pad query rows are sliced off the output.  Fully-masked
+  score blocks contribute exactly zero to the online recurrence (an explicit
+  guard keeps ``exp(-inf - -inf)`` from polluting the accumulator), so the
+  padded result is numerically identical to the unpadded one.
+
+Validated in interpret mode against ``ref.attention_ref``
+(tests/test_flash_attention.py), including ragged and non-divisible cases.
 """
 from __future__ import annotations
 
@@ -24,11 +44,14 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import pallas_compat
 
 NEG_INF = -1e30
+#: scores at/below this are treated as masked when guarding exp() — far below
+#: any reachable logit, far above NEG_INF
+_MASKED_BELOW = -1e28
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+def _flash_kernel(q_ref, k_ref, v_ref, kvs_ref, o_ref, m_scr, l_scr, acc_scr,
                   *, n_kv: int, scale: float, causal: bool,
-                  bq: int, bk: int):
+                  causal_offset: int, bq: int, bk: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -43,15 +66,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     v = v_ref[0].astype(jnp.float32)            # (bk, d)
 
     s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     if causal:
         rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        s = jnp.where(cols <= rows, s, NEG_INF)
+        s = jnp.where(cols <= rows + causal_offset, s, NEG_INF)
+    # ragged left-padding: columns before this row's kv_start are invalid
+    s = jnp.where(cols >= kvs_ref[0, 0], s, NEG_INF)
 
     m_prev = m_scr[...]                          # (bq, 1)
     m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)                       # (bq, bk)
-    alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+    # Guard fully-masked prefixes: while every score so far is NEG_INF,
+    # m_new == NEG_INF and exp(s - m_new) would be exp(0) = 1 for masked
+    # entries — force their contribution to exactly zero instead.
+    p = jnp.where(s > _MASKED_BELOW, jnp.exp(s - m_new), 0.0)  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)              # (bq, 1); 1 while masked
 
     m_scr[...] = m_new
     l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
@@ -60,36 +88,66 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
     @pl.when(ki == n_kv - 1)
     def _finalize():
-        o_ref[0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+        # rows with an empty softmax (pad query rows) would divide by zero;
+        # their output is sliced off by the wrapper, any finite value works
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+                    ).astype(o_ref.dtype)
 
 
 def flash_attention_bhsd(
     q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal: bool = True, bq: int = 128, bk: int = 128,
     scale: Optional[float] = None, interpret: bool = False,
+    kv_start: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """q, k, v: (BH, S, d) with S % bq == 0 == S_kv % bk.  One head-batch
-    per grid row; online softmax over kv blocks (the 'arbitrary' grid dim)."""
+    """Head-batched flash attention: q (BH, S, d); k, v (BH, S_kv, d).
+
+    One head-batch per grid row; online softmax over KV blocks (the
+    'arbitrary' grid dim).  ``kv_start`` is an optional (BH,) int32 of
+    first-valid KV columns (left-padded ragged rows).  Sequence lengths not
+    divisible by the block sizes are left-padded internally; see the module
+    docstring for why padding is exact.
+    """
     bh, sq, d = q.shape
     _, skv, _ = k.shape
-    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
     scale = d ** -0.5 if scale is None else scale
-    n_kv = skv // bk
-    grid = (bh, sq // bq, n_kv)
+    bq = max(1, min(bq, sq))
+    bk = max(1, min(bk, skv))
+
+    if kv_start is None:
+        kv_start = jnp.zeros((bh,), jnp.int32)
+    kv_start = kv_start.astype(jnp.int32)
+
+    # Left-pad to block multiples; the pad columns fold into kv_start.
+    pq = (-sq) % bq
+    pk = (-skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (pq, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (pk, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (pk, 0), (0, 0)))
+        kv_start = kv_start + pk
+    sq_p, skv_p = sq + pq, skv + pk
+
+    n_kv = skv_p // bk
+    grid = (bh, sq_p // bq, n_kv)
 
     kernel = functools.partial(
-        _flash_kernel, n_kv=n_kv, scale=scale, causal=causal, bq=bq, bk=bk)
+        _flash_kernel, n_kv=n_kv, scale=scale, causal=causal,
+        causal_offset=skv_p - sq_p, bq=bq, bk=bk)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -98,12 +156,20 @@ def flash_attention_bhsd(
         compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, kv_start[:, None])
+    return out[:, pq:, :] if pq else out
 
 
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
-                    bk: int = 128, interpret: bool = False) -> jax.Array:
-    """GQA front end: q (B, S, H, d); k, v (B, S_kv, KV, d) -> (B, S, H, d)."""
+                    bk: int = 128, interpret: bool = False,
+                    kv_start: Optional[jax.Array] = None,
+                    scale: Optional[float] = None) -> jax.Array:
+    """GQA front end: q (B, S, H, d); k, v (B, S_kv, KV, d) -> (B, S, H, d).
+
+    Grouped KV heads are expanded at this wrapper level (the kernel stays
+    pure); ``kv_start`` (B,) marks each row's first valid KV column for
+    left-padded ragged batches and is broadcast across heads.
+    """
     b, sq, h, d = q.shape
     _, skv, kvh, _ = k.shape
     if kvh != h:  # expand grouped KV heads (wrapper-level; kernel stays pure)
@@ -113,6 +179,7 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
     qb = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
     kb = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
     vb = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
-    out = flash_attention_bhsd(qb, kb, vb, causal=causal, bq=min(bq, sq),
-                               bk=min(bk, skv), interpret=interpret)
+    ks = None if kv_start is None else jnp.repeat(kv_start.astype(jnp.int32), h)
+    out = flash_attention_bhsd(qb, kb, vb, causal=causal, bq=bq, bk=bk,
+                               scale=scale, interpret=interpret, kv_start=ks)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=None,
                     help="KV-cache slots (default: number of prompts)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--attn-impl", choices=["chunked", "flash"], default=None,
+                    help="override the config's attention implementation "
+                         "(flash = tuned Pallas kernel for prefill)")
     ap.add_argument("--stats", action="store_true",
                     help="print engine stats (throughput, tile provenance)")
     ap.add_argument("--tuned-dir", default=None,
@@ -45,6 +48,9 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.attn_impl:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attention_impl=args.attn_impl)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
@@ -71,6 +77,9 @@ def main() -> None:
               f"decode {toks / dec_s:.0f} tok/s")
         for shape, info in (st["decode_tile_lookups"] or {}).items():
             print(f"[tiles] decode GEMM {shape:>16s} -> {info['tile']} "
+                  f"({info['source']})")
+        for shape, info in (st["prefill_flash_lookups"] or {}).items():
+            print(f"[tiles] prefill flash {shape:>14s} -> {info['tile']} "
                   f"({info['source']})")
 
 

@@ -90,7 +90,8 @@ def _shared_attn_apply(cfg, sp, x, positions, kv_cache=None, cache_offset=None,
         T.attn_dims(cfg), positions=positions,
         rope_theta=cfg.rope_theta if cfg.use_rope else 0.0,
         kv_cache=kv_cache, cache_offset=cache_offset,
-        p_dtype=jnp.dtype(cfg.attn_p_dtype), kv_start=kv_start)
+        p_dtype=jnp.dtype(cfg.attn_p_dtype),
+        attn_impl=cfg.attention_impl, kv_start=kv_start)
     x = x + h
     x = x + L.mlp(sp["mlp"], L.apply_norm(sp["ln2"], x, eps=cfg.norm_eps))
     return constrain(x, "hidden"), new_cache

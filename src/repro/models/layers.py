@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Optional, Tuple
 
 import jax
@@ -15,6 +16,8 @@ import jax.numpy as jnp
 
 from repro.core import einsum, matmul
 from repro.models.params import ParamSpec
+
+logger = logging.getLogger(__name__)
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -154,6 +157,72 @@ def kv_dequantize(q: jax.Array, scale: jax.Array, dtype):
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# Attention-impl routing (chunked jnp vs Pallas flash kernel)
+# ---------------------------------------------------------------------------
+
+#: fallback reasons already logged this process (each is logged once)
+_FLASH_FALLBACKS_LOGGED = set()
+
+
+def _is_static_zero(x) -> bool:
+    """True iff ``x`` is a compile-time-known zero (None counts).
+
+    Traced values (tracers) raise on ``int()`` — broad except because the
+    exact error type varies across JAX versions — and are treated as
+    not-statically-zero.
+    """
+    if x is None:
+        return True
+    try:
+        return int(x) == 0
+    except Exception:
+        return False
+
+
+def flash_fallback_reason(*, causal: bool, seq_len: int,
+                          cross_attention: bool,
+                          cache_offset_static_zero: bool = True
+                          ) -> Optional[str]:
+    """Why a flash-requested attention call must use the chunked path.
+
+    Returns ``None`` when the flash kernel applies.  The documented
+    fallbacks (each logged once per process by :func:`attention`):
+
+    * ``cross-attention`` — precomputed non-causal KV (``kv_override``);
+      the flash kernel covers causal self-attention.
+    * ``non-causal``      — e.g. encoder self-attention.
+    * ``decode-step``     — single-query steps read the whole KV cache; the
+      chunked path's cache-masked softmax is the decode kernel.
+    * ``cached-continuation`` — multi-token step into a cache at an offset
+      not statically known to be zero: it must attend the whole cache
+      prefix, which the flash path (fresh prefill columns only) does not
+      cover.
+
+    Note what is *not* here: ``kv_cache is not None`` alone.  Prefill runs
+    with a cache to fill (at offset 0), but attends over exactly the tokens
+    it just projected — the flash kernel handles it (ragged rows included
+    via ``kv_start``).  The old routing silently fell back whenever a cache
+    was present, which excluded serving prefill entirely.
+    """
+    if cross_attention:
+        return "cross-attention"
+    if not causal:
+        return "non-causal"
+    if seq_len == 1:
+        return "decode-step"
+    if not cache_offset_static_zero:
+        return "cached-continuation"
+    return None
+
+
+def _log_flash_fallback(reason: str) -> None:
+    if reason not in _FLASH_FALLBACKS_LOGGED:
+        _FLASH_FALLBACKS_LOGGED.add(reason)
+        logger.info("flash attention requested but falling back to the "
+                    "chunked path: %s (logged once)", reason)
+
+
 def cross_kv(params, src: jax.Array, dims: AttnDims):
     """Project encoder/image embeddings to the (static) cross K/V once."""
     b = src.shape[0]
@@ -187,9 +256,28 @@ def attention(
       non-causal, cache untouched.
     * ragged batches: ``kv_start`` (B,) marks the first non-pad column per
       row (left padding); pad columns are excluded from every softmax.
+    * ``attn_impl="flash"`` routes every eligible call — causal
+      self-attention with more than one query, i.e. training forwards AND
+      serving/scoring prefill (cache present, ragged rows included) —
+      through the tuned Pallas flash kernel
+      (:func:`repro.core.flash_attention`).  Ineligible calls fall back to
+      the chunked path with the reason logged once
+      (:func:`flash_fallback_reason`).
     """
     b, s, _ = x.shape
     h, kvh, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+
+    use_flash = False
+    if attn_impl == "flash":
+        reason = flash_fallback_reason(
+            causal=causal, seq_len=s,
+            cross_attention=kv_override is not None,
+            cache_offset_static_zero=(kv_cache is None
+                                      or _is_static_zero(cache_offset)))
+        if reason is None:
+            use_flash = True
+        else:
+            _log_flash_fallback(reason)
 
     q = matmul(x, params["wq"], bias=params.get("bq"))
     q = q.reshape(b, s, h, hd)
@@ -206,15 +294,6 @@ def attention(
     if rope_theta:
         q = apply_rope(q, positions, theta=rope_theta, fraction=rope_fraction)
         k = apply_rope(k, positions, theta=rope_theta, fraction=rope_fraction)
-
-    if attn_impl == "flash" and kv_cache is None and kv_start is None:
-        # Pallas flash-attention kernel: training / no-cache path only (the
-        # cache paths keep the chunked jnp implementation).  Interpret mode
-        # executes the kernel body on CPU; on TPU it compiles natively.
-        from repro.kernels.flash_attention import flash_attention
-        out = flash_attention(q, k, v, causal=causal,
-                              interpret=jax.default_backend() != "tpu")
-        return matmul(out.reshape(b, s, h * hd), params["wo"]), None
 
     new_cache = None
     kv_len = None
@@ -237,6 +316,18 @@ def attention(
         q_offset = cache_offset
         kv_len = cache_offset + s
         new_cache = (ck, cv)
+
+    if use_flash:
+        # Tuned Pallas flash kernel (training forward or prefill).  With a
+        # cache present the routing above guarantees cache_offset is a
+        # static 0 (prefill): attend over exactly the s freshly-written
+        # columns — sliced from the cache so a quantized cache's
+        # dequantization round-trip matches the chunked path bit-for-bit.
+        # Ragged left-padded rows mask via kv_start.
+        kf, vf = (k[:, :s], v[:, :s]) if kv_cache is not None else (k, v)
+        from repro.core import flash_attention as tuned_flash
+        out = tuned_flash(q, kf, vf, causal=causal, kv_start=kv_start)
+        return matmul(out.reshape(b, s, h * hd), params["wo"]), new_cache
 
     qg = q.reshape(b, s, kvh, dims.group, hd)
     out = _sdpa_chunked(qg, k, v, causal=causal, q_offset=q_offset,

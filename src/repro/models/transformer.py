@@ -416,7 +416,8 @@ def _run_encoder(cfg, params, encoder_embeds):
     def body(x, bp):
         h, _ = L.attention(bp["attn"], L.apply_norm(bp["ln1"], x, eps=cfg.norm_eps),
                            dims, causal=False,
-                           p_dtype=jnp.dtype(cfg.attn_p_dtype))
+                           p_dtype=jnp.dtype(cfg.attn_p_dtype),
+                           attn_impl=cfg.attention_impl)
         x = x + h
         x = x + L.mlp_gelu(bp["mlp"], L.apply_norm(bp["ln2"], x, eps=cfg.norm_eps))
         return constrain(x, "hidden"), None
@@ -449,7 +450,8 @@ def _run_whisper_decoder(cfg, params, x, positions, enc, cross_cache=None,
         h, new_cache = L.attention(
             bp["attn"], L.apply_norm(bp["ln1"], x, eps=cfg.norm_eps), dims,
             positions=positions, kv_cache=cache, cache_offset=cache_offset,
-            p_dtype=jnp.dtype(cfg.attn_p_dtype), kv_start=kv_start)
+            p_dtype=jnp.dtype(cfg.attn_p_dtype),
+            attn_impl=cfg.attention_impl, kv_start=kv_start)
         x = x + h
         h, _ = L.attention(bp["cross"],
                            L.apply_norm(bp["ln_x"], x, eps=cfg.norm_eps),

@@ -114,6 +114,7 @@ class Engine:
         self._queue: List[_Request] = []
         self._next_rid = 0
         self._tile_lookups: Optional[Dict[str, Dict[str, object]]] = None
+        self._prefill_flash_lookups: Dict[str, Dict[str, object]] = {}
         self._stats: Dict[str, float] = {
             "requests": 0, "tokens_generated": 0, "generate_calls": 0,
             "waves": 0, "device_transfers": 0, "cache_allocs": 0,
@@ -216,10 +217,51 @@ class Engine:
             }
         self._tile_lookups = lookups
 
+    def _record_prefill_flash_tiles(self, plen: int) -> None:
+        """Resolve the tuned flash-attention blocks this prefill bucket uses
+        and record the lookup provenance (mirrors the decode GEMM trace).
+
+        The model path performs the same lookup inside ``layers.attention``
+        (via :func:`repro.core.attention_api.flash_attention`); re-resolving
+        here keeps the telemetry identical without threading state through
+        jitted code.
+        """
+        cfg = self.model.cfg
+        if cfg.attention_impl != "flash" or not cfg.num_heads:
+            return
+        key = f"{plen}x{plen}x{cfg.resolved_head_dim}"
+        if key in self._prefill_flash_lookups:
+            return
+        from repro.core import current_hardware
+        from repro.core.attention_api import flash_tile_lookup
+        res = flash_tile_lookup(current_hardware(), cfg.dtype, plen, plen,
+                                cfg.resolved_head_dim)
+        self._prefill_flash_lookups[key] = {
+            "source": res.source,
+            "tile": res.config.label,
+            "matched_shape": res.matched_shape,
+        }
+
     # -- request queue --------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                row: Optional[int] = None) -> int:
-        """Queue one request; returns its request id (see :meth:`run`)."""
+        """Queue one generation request.
+
+        Args:
+          prompt: non-empty token-id sequence.
+          max_new_tokens: decode budget for this request (>= 1).
+          row: index of this request in the ``extra_inputs`` arrays later
+            passed to :meth:`run` (required when extras are used;
+            :meth:`generate` fills it automatically).
+
+        Returns:
+          The request id; :meth:`run` keys its result dict by it.
+
+        Example::
+
+            rid = eng.submit([5, 9, 2], max_new_tokens=16)
+            tokens = eng.run()[rid]
+        """
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt: each prompt needs >= 1 token")
@@ -233,7 +275,21 @@ class Engine:
 
     def run(self, extra_inputs: Optional[Dict[str, jax.Array]] = None
             ) -> Dict[int, List[int]]:
-        """Drain the queue in waves of up to ``max_batch`` slots."""
+        """Drain the submitted queue and return every request's tokens.
+
+        Requests are served in waves of up to ``max_batch`` KV-cache slots;
+        each wave is one prefill plus one fused device-resident decode loop
+        (a single host transfer).  Ragged prompt lengths within a wave are
+        handled by left-padding + ``kv_start`` masking.
+
+        Args:
+          extra_inputs: optional per-request model inputs (e.g. Whisper
+            ``encoder_embeds``) with leading dim indexed by each request's
+            ``row=``.
+
+        Returns:
+          ``{request_id: generated token list}`` for every drained request.
+        """
         results: Dict[int, List[int]] = {}
         # One key per run, split per wave: waves draw decorrelated samples
         # while repeated runs stay deterministic for a fixed seed.
@@ -337,6 +393,7 @@ class Engine:
                     jnp.asarray(arr)[jnp.asarray(rows)])
 
         cache = self._ensure_cache()
+        self._record_prefill_flash_tiles(plen)
         t0 = time.perf_counter()
         logits0, cache = self._prefill(self.params, batch, cache)
         if cfg.profile:
@@ -366,7 +423,26 @@ class Engine:
 
     # -- telemetry -------------------------------------------------------
     def stats(self) -> Dict[str, object]:
-        """Counters + tuned-tile lookup provenance for the decode path."""
+        """Counters + tuned-block lookup provenance, as one plain dict.
+
+        Beyond the raw counters (requests, tokens, waves, timings), the
+        tuning-framework telemetry:
+
+        * ``decode_tile_lookups`` — each decode-step GEMM shape mapped to
+          its resolved tile and provenance tier
+          (``exact``/``nearest``/``generic``/``default``/``fallback``);
+        * ``prefill_flash_lookups`` — for ``attention_impl="flash"`` models,
+          each prefill bucket's ``(sq, skv, head_dim)`` mapped to its tuned
+          ``(bq, bk)`` blocks and provenance;
+        * ``registry_hit_stats`` — global per-tier lookup counts.
+
+        Example::
+
+            eng = Engine(model, params, ServeConfig(max_batch=4))
+            eng.generate([[1, 2, 3]], max_new_tokens=8)
+            eng.stats()["prefill_flash_lookups"]
+            # {'8x8x64': {'source': 'nearest', 'tile': '128x128', ...}}
+        """
         from repro.core.registry import GLOBAL_REGISTRY
         out = dict(self._stats)
         out["slots"] = self.cfg.max_batch
@@ -374,5 +450,6 @@ class Engine:
         out["slots_evicted"] = self._sched.evicted
         out["slot_reuses"] = self._sched.reuses
         out["decode_tile_lookups"] = self._tile_lookups
+        out["prefill_flash_lookups"] = dict(self._prefill_flash_lookups)
         out["registry_hit_stats"] = dict(GLOBAL_REGISTRY.hit_stats)
         return out

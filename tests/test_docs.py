@@ -1,0 +1,47 @@
+"""Docs gates, runnable locally: every intra-repo markdown link resolves,
+the required docs tree exists and is linked from README, and EXPERIMENTS.md
+matches its generator (the same checks the CI docs job runs)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(script, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", script), *args],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=300)
+
+
+def test_docs_tree_exists_and_linked_from_readme():
+    for rel in ("docs/ARCHITECTURE.md", "docs/TUNING.md", "EXPERIMENTS.md"):
+        assert os.path.exists(os.path.join(REPO, rel)), rel
+    readme = open(os.path.join(REPO, "README.md")).read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/TUNING.md" in readme
+
+
+def test_no_broken_intra_repo_markdown_links():
+    proc = _run("check_docs.py")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_check_docs_catches_broken_link(tmp_path):
+    """The gate must actually fail on a dangling link, not just pass."""
+    bad = REPO + "/docs/_tmp_broken_link_test.md"
+    with open(bad, "w") as f:
+        f.write("[dangling](does-not-exist-anywhere.md)\n")
+    try:
+        proc = _run("check_docs.py", "docs/_tmp_broken_link_test.md")
+        assert proc.returncode == 1, proc.stdout
+        assert "BROKEN" in proc.stdout
+    finally:
+        os.remove(bad)
+
+
+def test_experiments_md_matches_generator():
+    proc = _run("make_experiments_md.py", "--check")
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -59,6 +59,124 @@ def test_flash_extreme_values_stable():
                                rtol=2e-4, atol=2e-4)
 
 
+def test_flash_non_divisible_seq_len_padded():
+    """S % bq != 0 and S % bk != 0: the kernel left-pads internally and the
+    result must still match the unpadded oracle exactly."""
+    q, k, v = _qkv(2, 40, 40, 4, 2, 16, jnp.float32, seed=11)
+    out = flash_attention(q, k, v, causal=True, bq=16, bk=16, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _ref_ragged(q, k, v, kv_start):
+    """Oracle for left-padded ragged rows: per-row causal+pad mask."""
+    import jax
+    d = q.shape[-1]
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32) * d ** -0.5,
+                   k.astype(jnp.float32))
+    sq = q.shape[1]
+    mask = jnp.tril(jnp.ones((sq, sq), bool))[None, None]
+    mask = mask & (jnp.arange(sq)[None, None, None, :]
+                   >= kv_start[:, None, None, None])
+    p = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+    return jnp.einsum("bhqt,bthd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def test_flash_ragged_kv_start_matches_masked_ref():
+    """Per-row kv_start masking (left-padded ragged batch), including a row
+    whose valid length is not divisible by bq."""
+    b, s, h, d = 3, 24, 2, 16
+    q, k, v = _qkv(b, s, s, h, h, d, jnp.float32, seed=13)
+    kv_start = jnp.asarray([0, 5, 17], jnp.int32)
+    out = flash_attention(q, k, v, causal=True, bq=8, bk=8, interpret=True,
+                          kv_start=kv_start)
+    ref = _ref_ragged(q, k, v, kv_start)
+    for i, st in enumerate([0, 5, 17]):   # pad rows are don't-care
+        np.testing.assert_allclose(np.asarray(out[i, st:]),
+                                   np.asarray(ref[i, st:]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_flash_ragged_rows_match_their_solo_runs():
+    """Each ragged row must equal the same row run alone and unpadded — the
+    kernel-level version of the serve engine's parity guarantee."""
+    b, s, h, d = 3, 24, 2, 16
+    q, k, v = _qkv(b, s, s, h, h, d, jnp.float32, seed=17)
+    starts = [0, 5, 17]
+    out = flash_attention(q, k, v, causal=True, bq=8, bk=8, interpret=True,
+                          kv_start=jnp.asarray(starts, jnp.int32))
+    for i, st in enumerate(starts):
+        solo = flash_attention(q[i:i + 1, st:], k[i:i + 1, st:],
+                               v[i:i + 1, st:], causal=True, bq=8, bk=8,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i, st:]),
+                                   np.asarray(solo[0]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_tuned_entry_point_resolves_blocks_from_registry():
+    """core.flash_attention (the public tuned entry point) pulls (bq, bk)
+    from the op="flash_attention" registry bucket."""
+    import repro.core as core
+    from repro.core.attention_api import flash_tile_lookup
+
+    q, k, v = _qkv(1, 32, 32, 2, 2, 16, jnp.float32, seed=19)
+    core.GLOBAL_REGISTRY.put_op(
+        core.OP_FLASH_ATTENTION, core.FlashAttentionConfig(16, 16),
+        "tpu-v5e", jnp.float32, (32, 32, 16))
+    try:
+        res = flash_tile_lookup("tpu-v5e", jnp.float32, 32, 32, 16)
+        assert res.source == "exact"
+        assert res.config == core.FlashAttentionConfig(16, 16)
+        out = core.flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+    finally:
+        # drop the synthetic entry so other tests see pristine lookups
+        core.GLOBAL_REGISTRY._exact.get(
+            (core.OP_FLASH_ATTENTION, "tpu-v5e", "float32"), {}
+        ).pop((32, 32, 16), None)
+
+
+def test_prefill_with_cache_routes_through_flash(monkeypatch):
+    """Satellite bugfix: attn_impl="flash" must be honored for prefill even
+    though a KV cache is being filled (the old routing silently fell back to
+    the chunked path whenever kv_cache was not None)."""
+    import dataclasses
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.kernels import flash_attention as fa_mod
+    from repro.models import build_model
+
+    calls = []
+    real = fa_mod.flash_attention_bhsd
+    monkeypatch.setattr(fa_mod, "flash_attention_bhsd",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+
+    cfg = dataclasses.replace(ARCHITECTURES["llama3.2-1b"].reduced(),
+                              attention_impl="flash")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 32)
+    batch = {"tokens": jnp.asarray([[3, 1, 4, 1], [5, 9, 2, 6]], jnp.int32)}
+    logits, cache = model.prefill(params, batch, cache)
+    assert calls, "prefill with a KV cache did not reach the flash kernel"
+
+    # and the chunked model produces the same logits (numerics parity)
+    m_c = build_model(dataclasses.replace(cfg, attention_impl="chunked"))
+    logits_c, _ = m_c.prefill(params, batch, model.init_cache(2, 32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_c),
+                               rtol=2e-4, atol=2e-4)
+
+    # decode steps stay on the chunked path (documented fallback)
+    calls.clear()
+    tok = jnp.asarray([[1], [2]], jnp.int32)
+    model.decode_step(params, tok, cache, jnp.int32(4))
+    assert not calls, "decode step must not use the flash kernel"
+
+
 def test_model_with_flash_attention_matches_chunked():
     """Selectable attention backend: flash == chunked at the model level."""
     import dataclasses

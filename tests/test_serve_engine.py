@@ -1,6 +1,8 @@
-"""Device-resident continuous-batching engine: ragged parity, EOS in the
-fused loop, slot reuse, input validation, and the one-host-transfer-per-call
-regression guard."""
+"""Device-resident continuous-batching engine: ragged parity (chunked and
+flash prefill), EOS in the fused loop, slot reuse, input validation, and the
+one-host-transfer-per-call regression guard."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -10,8 +12,10 @@ from repro.models import build_model
 from repro.serve import Engine, ServeConfig, generate_per_prompt
 
 
-def _build(arch="llama3.2-1b", **serve_kw):
+def _build(arch="llama3.2-1b", attention_impl=None, **serve_kw):
     cfg = ARCHITECTURES[arch].reduced()
+    if attention_impl:
+        cfg = dataclasses.replace(cfg, attention_impl=attention_impl)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(1))
     kw = dict(max_batch=3, max_len=64)
@@ -48,6 +52,56 @@ def test_ragged_parity_ssm_and_hybrid():
         batched = eng.generate(RAGGED, 4)
         singles = [eng.generate([p], 4)[0] for p in RAGGED]
         assert batched == singles, arch
+
+
+# one representative per model family (dense / moe / vlm / audio / hybrid);
+# mamba2 (ssm) is attention-free, so the hybrid carries the SSM-side check
+FLASH_FAMILIES = ["llama3.2-1b", "olmoe-1b-7b", "llama-3.2-vision-11b",
+                  "whisper-large-v3", "zamba2-2.7b"]
+
+
+@pytest.mark.parametrize("arch", FLASH_FAMILIES)
+def test_flash_prefill_ragged_parity_all_families(arch):
+    """Tentpole acceptance: with attention_impl="flash" the engine's ragged
+    prefill routes through the tuned flash kernel and still matches the
+    unpadded batch-1 oracle token-for-token."""
+    cfg, model, params, eng = _build(arch, attention_impl="flash")
+    prompts = [[t % cfg.vocab_size for t in p] for p in RAGGED]
+    extra = {k: jnp.zeros((len(prompts),) + s.shape[1:], s.dtype)
+             for k, s in model.extra_inputs(len(prompts)).items()}
+    batched = eng.generate(prompts, 5, extra_inputs=extra or None)
+    oracle = generate_per_prompt(model, params, prompts, 5, max_len=64,
+                                 extra_inputs=extra or None)
+    assert batched == oracle, arch
+
+
+def test_flash_prefill_non_divisible_prompt_length():
+    """A prompt length that is not divisible by the (tuned or default) bq
+    exercises the kernel's internal left-padding inside the engine."""
+    cfg, model, params, eng = _build(attention_impl="flash", max_len=128)
+    prompts = [[(i * 7 + 3) % cfg.vocab_size for i in range(37)],
+               [(i * 5 + 1) % cfg.vocab_size for i in range(11)]]
+    batched = eng.generate(prompts, 4)
+    oracle = generate_per_prompt(model, params, prompts, 4, max_len=128)
+    assert batched == oracle
+
+
+def test_flash_prefill_provenance_in_stats():
+    """Engine.stats() must surface which tuned (bq, bk) blocks prefill used
+    and which registry tier satisfied the lookup."""
+    cfg, model, params, eng = _build(attention_impl="flash")
+    eng.generate([[1, 2, 3]], 2)
+    st = eng.stats()
+    lookups = st["prefill_flash_lookups"]
+    assert lookups, "flash prefill lookups were not recorded"
+    for shape, info in lookups.items():
+        assert info["source"] in ("exact", "nearest", "generic", "default",
+                                  "fallback")
+        assert "x" in info["tile"]
+    # chunked engines don't report flash provenance
+    _, _, _, eng_c = _build()
+    eng_c.generate([[1, 2, 3]], 2)
+    assert eng_c.stats()["prefill_flash_lookups"] == {}
 
 
 def test_eos_stops_inside_fused_loop():

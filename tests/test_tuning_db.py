@@ -1,6 +1,7 @@
-"""Tuning-database subsystem: schema-checked persistence, nearest-shape
-fallback ordering, guided-vs-exhaustive search, and end-to-end pickup of a
-committed DB by a fresh process running matmul under pallas-interpret."""
+"""Tuning-database subsystem: schema-checked persistence (op-keyed v3 +
+legacy-gemm migration), nearest-shape fallback ordering, op-keyed registry
+isolation, guided-vs-exhaustive search, and end-to-end pickup of a committed
+DB by a fresh process running matmul under pallas-interpret."""
 import json
 import os
 import subprocess
@@ -10,9 +11,10 @@ import textwrap
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (SEARCH_EXHAUSTIVE, SEARCH_GUIDED, TileConfig,
+from repro.core import (FlashAttentionConfig, OP_FLASH_ATTENTION, OP_GEMM,
+                        SEARCH_EXHAUSTIVE, SEARCH_GUIDED, TileConfig,
                         TileRegistry, TuningDB, TuningDBError, TuningRecord,
-                        sweep_gemm)
+                        sweep_flash_attention, sweep_gemm)
 from repro.core import tuning_db as tdb
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -20,7 +22,13 @@ SRC = os.path.join(REPO, "src")
 
 
 def _rec(m, k, n, bm=128, bk=128, bn=128, dtype="bfloat16", secs=1e-4):
-    return TuningRecord(dtype=dtype, m=m, k=k, n=n, bm=bm, bk=bk, bn=bn,
+    return TuningRecord.gemm(dtype, m, k, n, bm, bk, bn,
+                             source="model", seconds=secs, gflops=1.0)
+
+
+def _flash_rec(sq, skv, d, bq=128, bk=128, dtype="bfloat16", secs=1e-4):
+    return TuningRecord(op=OP_FLASH_ATTENTION, dtype=dtype,
+                        shape=(sq, skv, d), block=(bq, bk),
                         source="model", seconds=secs, gflops=1.0)
 
 
@@ -52,9 +60,8 @@ def test_db_keep_best_merge():
     assert db.get("bfloat16", 64, 64, 64).config == TileConfig(256, 256, 256)
     # measure vs measure: best-of-runs, worse score kept out
     def meas(bm, secs):
-        return TuningRecord(dtype="float32", m=8, k=8, n=8,
-                            bm=bm, bk=bm, bn=bm, source="measure",
-                            seconds=secs)
+        return TuningRecord.gemm("float32", 8, 8, 8, bm, bm, bm,
+                                 source="measure", seconds=secs)
     db.add(meas(32, 2e-3))
     db.add(meas(64, 1e-3))                               # better -> replaces
     assert db.get("float32", 8, 8, 8).config == TileConfig(64, 64, 64)
@@ -78,13 +85,13 @@ def test_db_measure_outranks_model_estimate():
     measurement replaces a model entry even when its score looks worse, and
     a model estimate can never displace a measurement."""
     db = TuningDB("host-cpu")
-    db.add(TuningRecord(dtype="float32", m=64, k=64, n=64,
-                        bm=128, bk=128, bn=128, source="model", seconds=1e-6))
-    db.add(TuningRecord(dtype="float32", m=64, k=64, n=64,
-                        bm=32, bk=32, bn=32, source="measure", seconds=1e-3))
+    db.add(TuningRecord.gemm("float32", 64, 64, 64, 128, 128, 128,
+                             source="model", seconds=1e-6))
+    db.add(TuningRecord.gemm("float32", 64, 64, 64, 32, 32, 32,
+                             source="measure", seconds=1e-3))
     assert db.get("float32", 64, 64, 64).source == "measure"
-    db.add(TuningRecord(dtype="float32", m=64, k=64, n=64,
-                        bm=128, bk=128, bn=128, source="model", seconds=1e-9))
+    db.add(TuningRecord.gemm("float32", 64, 64, 64, 128, 128, 128,
+                             source="model", seconds=1e-9))
     assert db.get("float32", 64, 64, 64).source == "measure"
 
 
@@ -301,6 +308,148 @@ def test_autoload_respects_disable_env(tmp_path, monkeypatch):
 def test_markdown_rendering_matches_tab4_shape():
     db = TuningDB("tpu-v5e")
     db.add(_rec(1024, 1024, 1024, 512, 1024, 1024))
+    db.add(_flash_rec(2048, 2048, 128, 256, 512))
     md = db.markdown()
     assert "paper Tab. 4" in md
-    assert "| bfloat16 | 1024 | 1024 | 1024 | 512x1024x1024 | model |" in md
+    assert "Tuned gemm table" in md and "Tuned flash_attention table" in md
+    assert "| bfloat16 | 1024x1024x1024 | 512x1024x1024 | model |" in md
+    assert "| bfloat16 | 2048x2048x128 | 256x512 | model |" in md
+
+
+# ---------------------------------------------------------------------------
+# Op-keyed v3 schema: legacy migration + op isolation
+# ---------------------------------------------------------------------------
+
+def test_legacy_gemm_db_migrates_and_roundtrips(tmp_path):
+    """A legacy (schema_version 2, flat m/k/n entries, no op) file — the
+    format the repo committed before the multi-op framework — must load with
+    every entry as op="gemm", and save back as an op-keyed v3 file that
+    reloads identically."""
+    legacy = {
+        "schema_version": 2, "hardware": "tpu-v5e",
+        "entries": [{"dtype": "bfloat16", "m": 1024, "k": 1024, "n": 1024,
+                     "bm": 512, "bk": 1024, "bn": 1024,
+                     "source": "model", "seconds": 1e-5, "gflops": 100.0}],
+    }
+    path = str(tmp_path / "legacy.json")
+    with open(path, "w") as f:
+        json.dump(legacy, f)
+    db = TuningDB.from_file(path)
+    rec = db.get("bfloat16", 1024, 1024, 1024)
+    assert rec is not None and rec.op == OP_GEMM
+    assert rec.config == TileConfig(512, 1024, 1024)
+    # round-trip: the migrated DB persists op-keyed (v3) and reloads equal
+    out = str(tmp_path / "migrated.json")
+    db.save(out)
+    blob = json.load(open(out))
+    assert blob["schema_version"] == tdb.SCHEMA_VERSION
+    assert blob["entries"][0]["op"] == OP_GEMM
+    assert blob["entries"][0]["shape"] == [1024, 1024, 1024]
+    db2 = TuningDB.from_file(out)
+    assert db2.records() == db.records()
+
+
+def test_db_holds_both_ops_and_reloads(tmp_path):
+    db = TuningDB("tpu-v5e")
+    db.add(_rec(1024, 1024, 1024, 512, 1024, 1024))
+    db.add(_flash_rec(2048, 2048, 128, 512, 1024))
+    path = str(tmp_path / "tpu-v5e.json")
+    db.save(path)
+    db2 = TuningDB.from_file(path)
+    assert db2.ops() == [OP_FLASH_ATTENTION, OP_GEMM]
+    flash = db2.get_op(OP_FLASH_ATTENTION, "bfloat16", (2048, 2048, 128))
+    assert flash.config == FlashAttentionConfig(512, 1024)
+    gemm = db2.get("bfloat16", 1024, 1024, 1024)
+    assert gemm.config == TileConfig(512, 1024, 1024)
+    # same (dtype, shape) under different ops are distinct entries
+    db2.add(TuningRecord(op=OP_FLASH_ATTENTION, dtype="bfloat16",
+                         shape=(1024, 1024, 1024), block=(64, 128)))
+    assert len(db2) == 3
+    assert db2.get("bfloat16", 1024, 1024, 1024).config == \
+        TileConfig(512, 1024, 1024)
+
+
+def test_registry_lookups_never_cross_ops():
+    """Op buckets mirror the (hardware, dtype) bucket fix: a perfect-shape
+    GEMM entry must never satisfy (nor be scanned by) a flash lookup, and
+    vice versa."""
+    reg = TileRegistry()
+    reg.put(TileConfig(512, 1024, 1024), "tpu-v5e", jnp.bfloat16,
+            1024, 1024, 1024)
+    res = reg.lookup_op(OP_FLASH_ATTENTION, "tpu-v5e", jnp.bfloat16,
+                        (1024, 1024, 1024))
+    assert res.source == "default"
+    assert isinstance(res.config, FlashAttentionConfig)
+    reg.put_op(OP_FLASH_ATTENTION, FlashAttentionConfig(256, 512),
+               "tpu-v5e", jnp.bfloat16, (1024, 1024, 128))
+    # nearest within the flash bucket only
+    near = reg.lookup_op(OP_FLASH_ATTENTION, "tpu-v5e", jnp.bfloat16,
+                         (2048, 2048, 128))
+    assert near.source == "nearest"
+    assert near.config == FlashAttentionConfig(256, 512)
+    # ...and the gemm side is equally unaffected by the flash entry
+    g = reg.lookup("tpu-v5e", jnp.bfloat16, 1024, 1024, 128)
+    assert isinstance(g.config, TileConfig)
+    assert g.matched_shape == (1024, 1024, 1024)
+
+
+def test_registry_flat_snapshot_roundtrips_both_ops(tmp_path):
+    path = str(tmp_path / "snap.json")
+    reg = TileRegistry()
+    reg.put(TileConfig(256, 512, 256), "tpu-v5e", jnp.bfloat16, 512, 512, 512)
+    reg.put_op(OP_FLASH_ATTENTION, FlashAttentionConfig(64, 128),
+               "tpu-v5e", jnp.bfloat16, (512, 512, 64))
+    reg.put_op(OP_FLASH_ATTENTION, FlashAttentionConfig(32, 32),
+               "host-cpu", jnp.float32)              # generic entry
+    reg.save(path)
+    reg2 = TileRegistry(path)
+    assert reg2.get("tpu-v5e", jnp.bfloat16, 512, 512, 512) == \
+        TileConfig(256, 512, 256)
+    assert reg2.get_op(OP_FLASH_ATTENTION, "tpu-v5e", jnp.bfloat16,
+                       (512, 512, 64)) == FlashAttentionConfig(64, 128)
+    assert reg2.lookup_op(OP_FLASH_ATTENTION, "host-cpu",
+                          jnp.float32).source == "generic"
+
+
+def test_flash_sweep_guided_and_recorded():
+    reg = TileRegistry()
+    kw = dict(dtype=jnp.bfloat16, mode="model", record=False)
+    full = sweep_flash_attention(2048, 2048, 128,
+                                 search=SEARCH_EXHAUSTIVE, **kw)
+    guided = sweep_flash_attention(2048, 2048, 128, search=SEARCH_GUIDED,
+                                   top_k=4, **kw)
+    assert guided.candidates_total == full.candidates_total
+    assert guided.evaluated < full.evaluated
+    assert guided.best.seconds <= full.best.seconds
+    assert guided.best.config == full.best.config
+    res = sweep_flash_attention(2048, 2048, 128, dtype=jnp.bfloat16,
+                                mode="model", registry=reg)
+    hit = reg.lookup_op(OP_FLASH_ATTENTION, "tpu-v5e", jnp.bfloat16,
+                        (2048, 2048, 128))
+    assert hit.source == "exact"
+    assert hit.config == res.best.config
+
+
+def test_flash_sweep_measure_mode_runs():
+    from repro.core import FLASH_INTERPRET_SPACE, HOST_CPU
+    res = sweep_flash_attention(32, 32, 8, dtype=jnp.float32, mode="measure",
+                                space=FLASH_INTERPRET_SPACE,
+                                hardware=HOST_CPU, repeats=1, record=False)
+    assert all(p.seconds > 0 for p in res.points)
+    assert all(p.source.startswith("measure") for p in res.points)
+
+
+def test_sweep_cli_flash_op_writes_op_keyed_entries(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "tune.py"), "sweep",
+         "--hardware", "tpu-v5e", "--mode", "model",
+         "--op", "flash_attention", "--shapes", "512x512x64",
+         "--dtype", "bfloat16", "--db-dir", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    db = TuningDB.from_file(str(tmp_path / "tpu-v5e.json"))
+    rec = db.get_op(OP_FLASH_ATTENTION, "bfloat16", (512, 512, 64))
+    assert rec is not None
+    assert isinstance(rec.config, FlashAttentionConfig)
