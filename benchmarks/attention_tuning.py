@@ -6,8 +6,9 @@ framework: fix an attention problem (sq, skv, head_dim), sweep the
 best-of-repeats per candidate, and report the per-(hardware, dtype) optimum
 — plus the guided search's evaluated/total fraction, exactly as for GEMM.
 
-Backends: tpu-v5e (analytic flash cost model — the TARGET hardware, this
-container is CPU-only) and host-measured pallas-interpret (small problems).
+The model-scored sections target one hardware profile (``run(hardware=...)``,
+set per CI-matrix backend via ``benchmarks.run --hardware``); the measured
+section times pallas-interpret on this host under ``cpu-interpret``.
 
 ``run(smoke=True)`` shrinks every problem so the whole suite finishes in
 seconds — the CI fast tier runs it and uploads ``BENCH_attention_tuning.json``
@@ -15,13 +16,15 @@ as a trajectory artifact next to the GEMM and serving benches.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import jax.numpy as jnp
 
-from repro.core import (FLASH_INTERPRET_SPACE, HOST_CPU, SEARCH_EXHAUSTIVE,
-                        SEARCH_GUIDED, TPU_V5E, sweep_flash_attention)
+from repro.core import (CPU_INTERPRET, FLASH_INTERPRET_SPACE,
+                        SEARCH_EXHAUSTIVE, SEARCH_GUIDED, TPU_V5E,
+                        sweep_flash_attention)
 from repro.core.cost_model import flash_cost
+from repro.core.hardware import HardwareProfile, resolve_profile
 from repro.core.tile_config import FlashAttentionConfig
 
 S_LONG = 8192          # long-prefill sequence
@@ -30,24 +33,33 @@ S_SMOKE = 256
 HEAD_DIM = 128
 
 
-def tune_tpu_model(s: int = S_LONG, d: int = HEAD_DIM,
-                   dtype=jnp.bfloat16) -> List[tuple]:
+def _target(hardware) -> HardwareProfile:
+    """The profile the model-scored sections tune for.  ``benchmarks.run``
+    always passes the resolved per-backend name (env/flag/detection); a
+    direct call with ``hardware=None`` pins the paper's TPU target."""
+    return resolve_profile(hardware, default=TPU_V5E)
+
+
+def tune_target_model(s: int = S_LONG, d: int = HEAD_DIM,
+                      dtype=jnp.bfloat16, hardware=None) -> List[tuple]:
     """Figs. 3/4 analogue for flash attention via the cost model."""
+    hw = _target(hardware)
     rows = []
     res = sweep_flash_attention(s, s, d, dtype=dtype, mode="model",
-                                search=SEARCH_EXHAUSTIVE, hardware=TPU_V5E,
+                                search=SEARCH_EXHAUSTIVE, hardware=hw,
                                 record=False)
     for p in sorted(res.points, key=lambda p: p.seconds):
-        rows.append((f"attn_tune/tpu-v5e/{jnp.dtype(dtype).name}/S{s}/"
+        rows.append((f"attn_tune/{hw.name}/{jnp.dtype(dtype).name}/S{s}/"
                      f"{p.config.label}", p.seconds * 1e6, p.gflops))
     return rows
 
 
 def guided_vs_exhaustive(s: int = S_LONG, d: int = HEAD_DIM,
-                         dtype=jnp.bfloat16) -> List[tuple]:
+                         dtype=jnp.bfloat16, hardware=None) -> List[tuple]:
     """Guided-search check for the attention op: fraction evaluated plus a
     winner-match verdict against the exhaustive sweep (ranking drift gate)."""
-    kw = dict(dtype=dtype, mode="model", hardware=TPU_V5E, record=False)
+    hw = _target(hardware)
+    kw = dict(dtype=dtype, mode="model", hardware=hw, record=False)
     guided = sweep_flash_attention(s, s, d, search=SEARCH_GUIDED, **kw)
     full = sweep_flash_attention(s, s, d, search=SEARCH_EXHAUSTIVE, **kw)
     frac = guided.evaluated / max(guided.candidates_total, 1)
@@ -55,22 +67,23 @@ def guided_vs_exhaustive(s: int = S_LONG, d: int = HEAD_DIM,
         verdict = "winner-match"
     else:
         verdict = f"winner-off-{guided.best.seconds / full.best.seconds:.3f}x"
-    return [(f"attn_tune_guided/tpu-v5e/S{s}/"
+    return [(f"attn_tune_guided/{hw.name}/S{s}/"
              f"eval{guided.evaluated}of{guided.candidates_total}/{verdict}",
              guided.best.seconds * 1e6, frac)]
 
 
 def bq_intensity_curve(s: int = S_LONG, d: int = HEAD_DIM,
-                       dtype=jnp.bfloat16) -> List[tuple]:
+                       dtype=jnp.bfloat16, hardware=None) -> List[tuple]:
     """The attention Eq.-7 analogue: doubling bq halves the K/V re-reads,
     so modelled HBM bytes fall until the VMEM cliff."""
+    hw = _target(hardware)
     rows = []
     for bq in (64, 128, 256, 512):
         cfg = FlashAttentionConfig(bq=bq, bk=512)
-        if not cfg.fits(TPU_V5E, d, dtype):
+        if not cfg.fits(hw, d, dtype):
             continue
-        c = flash_cost(s, s, d, cfg, TPU_V5E, dtype)
-        rows.append((f"attn_intensity/tpu-v5e/bq{bq}/S{s}",
+        c = flash_cost(s, s, d, cfg, hw, dtype)
+        rows.append((f"attn_intensity/{hw.name}/bq{bq}/S{s}",
                      c.total_s * 1e6, c.arithmetic_intensity))
     return rows
 
@@ -78,40 +91,42 @@ def bq_intensity_curve(s: int = S_LONG, d: int = HEAD_DIM,
 def tune_host_measured(s: int = 64, d: int = 16, repeats: int = 2):
     """Measured wall-clock sweep on this host (pallas-interpret, tiny S)."""
     res = sweep_flash_attention(s, s, d, dtype=jnp.float32, mode="measure",
-                                space=FLASH_INTERPRET_SPACE, hardware=HOST_CPU,
+                                space=FLASH_INTERPRET_SPACE,
+                                hardware=CPU_INTERPRET,
                                 repeats=repeats, record=False)
     rows = []
     for p in sorted(res.points, key=lambda p: p.seconds)[:5]:
-        rows.append((f"attn_tune/host-interpret/S{s}/{p.config.label}",
-                     p.seconds * 1e6, p.gflops))
+        rows.append((f"attn_tune/{CPU_INTERPRET.name}/measured/S{s}/"
+                     f"{p.config.label}", p.seconds * 1e6, p.gflops))
     return rows
 
 
-def tab4_optima(sizes=(S_LONG, S_MED), d: int = HEAD_DIM):
+def tab4_optima(sizes=(S_LONG, S_MED), d: int = HEAD_DIM, hardware=None):
     """Tab. 4 analogue: per-(hardware, dtype, S) optimum flash blocks."""
+    hw = _target(hardware)
     rows = []
     for dtype in (jnp.bfloat16, jnp.float32):
         for s in sizes:
             res = sweep_flash_attention(s, s, d, dtype=dtype, mode="model",
-                                        hardware=TPU_V5E, record=False)
+                                        hardware=hw, record=False)
             b = res.best
-            rows.append((f"attn_tab4/tpu-v5e/{jnp.dtype(dtype).name}/S{s}/"
+            rows.append((f"attn_tab4/{hw.name}/{jnp.dtype(dtype).name}/S{s}/"
                          f"best={b.config.label}", b.seconds * 1e6, b.gflops))
     return rows
 
 
-def run(smoke: bool = False) -> List[tuple]:
+def run(smoke: bool = False, hardware: Optional[str] = None) -> List[tuple]:
     rows = []
     if smoke:
-        rows += tune_tpu_model(S_SMOKE)[:6]
-        rows += guided_vs_exhaustive(S_SMOKE)
-        rows += bq_intensity_curve(S_SMOKE)
+        rows += tune_target_model(S_SMOKE, hardware=hardware)[:6]
+        rows += guided_vs_exhaustive(S_SMOKE, hardware=hardware)
+        rows += bq_intensity_curve(S_SMOKE, hardware=hardware)
         rows += tune_host_measured(32, repeats=1)
-        rows += tab4_optima(sizes=(S_SMOKE,))
+        rows += tab4_optima(sizes=(S_SMOKE,), hardware=hardware)
         return rows
-    rows += tune_tpu_model()[:6]
-    rows += guided_vs_exhaustive()
-    rows += bq_intensity_curve()
+    rows += tune_target_model(hardware=hardware)[:6]
+    rows += guided_vs_exhaustive(hardware=hardware)
+    rows += bq_intensity_curve(hardware=hardware)
     rows += tune_host_measured()
-    rows += tab4_optima()
+    rows += tab4_optima(hardware=hardware)
     return rows

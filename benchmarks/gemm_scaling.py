@@ -11,21 +11,23 @@ import jax.numpy as jnp
 
 from repro.core import TPU_V5E, TileConfig, sweep_gemm
 from repro.core.cost_model import gemm_cost
+from repro.core.hardware import resolve_profile
 
 UNTUNED = TileConfig(128, 128, 128)   # registry default = "20% of peak" case
 
 
-def scaling_tpu(dtype=jnp.bfloat16) -> List[tuple]:
+def scaling_tpu(dtype=jnp.bfloat16, hardware=None) -> List[tuple]:
+    hw = resolve_profile(hardware, default=TPU_V5E)
     rows = []
     # tune once at the paper's N=10240, then scale N with fixed params
     tuned = sweep_gemm(10240, 10240, 10240, dtype=dtype, mode="model",
-                       hardware=TPU_V5E, record=False).best.config
+                       hardware=hw, record=False).best.config
     for n in range(1024, 20481, 1024):
-        c_t = gemm_cost(n, n, n, tuned, TPU_V5E, dtype)
-        c_u = gemm_cost(n, n, n, UNTUNED, TPU_V5E, dtype)
-        rows.append((f"gemm_scaling/tpu-v5e/tuned/N{n}",
+        c_t = gemm_cost(n, n, n, tuned, hw, dtype)
+        c_u = gemm_cost(n, n, n, UNTUNED, hw, dtype)
+        rows.append((f"gemm_scaling/{hw.name}/tuned/N{n}",
                      c_t.total_s * 1e6, c_t.tflops))
-        rows.append((f"gemm_scaling/tpu-v5e/untuned/N{n}",
+        rows.append((f"gemm_scaling/{hw.name}/untuned/N{n}",
                      c_u.total_s * 1e6, c_u.tflops))
     return rows
 
@@ -48,8 +50,8 @@ def scaling_host_measured() -> List[tuple]:
     return rows
 
 
-def run() -> List[tuple]:
-    rows = scaling_tpu()
+def run(hardware=None) -> List[tuple]:
+    rows = scaling_tpu(hardware=hardware)
     # thin the TPU rows for console readability: every 4th N + ends
     keep = [r for i, r in enumerate(rows)
             if (i // 2) % 4 == 0 or i >= len(rows) - 2]

@@ -8,8 +8,11 @@ Reproduces the paper's tuning methodology:
   * report the optimum per (backend, dtype) — the Tab. 4 analogue —
     and the guided search's evaluated/total fraction (autotuner v2).
 
-Backends: tpu-v5e (analytic cost model — the TARGET hardware, this container
-is CPU-only), host measured XLA, host measured pallas-interpret (small N).
+The model-scored sections target ONE hardware profile (``run(hardware=...)``,
+threaded from ``benchmarks.run --hardware`` / ``$REPRO_HARDWARE`` — the CI
+backend matrix runs this suite once per profile); the measured section always
+times pallas-interpret on this host under the ``cpu-interpret`` profile, the
+only backend a CPU container can genuinely measure.
 
 ``run(smoke=True)`` shrinks every problem so the whole suite finishes in
 seconds — the CI fast tier runs it and uploads the JSON as the repo's
@@ -17,12 +20,13 @@ benchmark trajectory artifact.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import jax.numpy as jnp
 
-from repro.core import (HOST_CPU, INTERPRET_SPACE, SEARCH_EXHAUSTIVE,
+from repro.core import (CPU_INTERPRET, INTERPRET_SPACE, SEARCH_EXHAUSTIVE,
                         SEARCH_GUIDED, TPU_V5E, sweep_gemm)
+from repro.core.hardware import HardwareProfile, resolve_profile
 from repro.core.tile_config import square
 from repro.core.cost_model import gemm_cost
 
@@ -31,18 +35,28 @@ N_CONTROL = 7168       # paper's control size
 N_SMOKE = 512          # CI smoke size
 
 
-def tune_tpu_model(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[tuple]:
+def _target(hardware) -> HardwareProfile:
+    """The profile the model-scored sections tune for.  ``benchmarks.run``
+    always passes the resolved per-backend name (env/flag/detection); a
+    direct call with ``hardware=None`` pins the paper's TPU target."""
+    return resolve_profile(hardware, default=TPU_V5E)
+
+
+def tune_target_model(n: int = N_PAPER, dtype=jnp.bfloat16,
+                      hardware=None) -> List[tuple]:
     """Figs. 3/4 analogue on the target hardware via the cost model."""
+    hw = _target(hardware)
     rows = []
     res = sweep_gemm(n, n, n, dtype=dtype, mode="model",
-                     search=SEARCH_EXHAUSTIVE, hardware=TPU_V5E, record=False)
+                     search=SEARCH_EXHAUSTIVE, hardware=hw, record=False)
     for p in sorted(res.points, key=lambda p: p.seconds):
-        rows.append((f"gemm_tune/tpu-v5e/{jnp.dtype(dtype).name}/N{n}/"
+        rows.append((f"gemm_tune/{hw.name}/{jnp.dtype(dtype).name}/N{n}/"
                      f"{p.config.label}", p.seconds * 1e6, p.gflops))
     return rows
 
 
-def guided_vs_exhaustive(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[tuple]:
+def guided_vs_exhaustive(n: int = N_PAPER, dtype=jnp.bfloat16,
+                         hardware=None) -> List[tuple]:
     """Autotuner v2 headline: guided search evaluates a fraction of the space
     and its winner is checked against the exhaustive sweep's.
 
@@ -50,7 +64,8 @@ def guided_vs_exhaustive(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[tuple]:
     winner matched (winner-match) or how far off it landed (regression
     ratio), so the CI trajectory catches ranking drift.
     """
-    kw = dict(dtype=dtype, mode="model", hardware=TPU_V5E, record=False)
+    hw = _target(hardware)
+    kw = dict(dtype=dtype, mode="model", hardware=hw, record=False)
     guided = sweep_gemm(n, n, n, search=SEARCH_GUIDED, **kw)
     full = sweep_gemm(n, n, n, search=SEARCH_EXHAUSTIVE, **kw)
     frac = guided.evaluated / max(guided.candidates_total, 1)
@@ -58,20 +73,22 @@ def guided_vs_exhaustive(n: int = N_PAPER, dtype=jnp.bfloat16) -> List[tuple]:
         verdict = "winner-match"
     else:
         verdict = f"winner-off-{guided.best.seconds / full.best.seconds:.3f}x"
-    return [(f"gemm_tune_guided/tpu-v5e/N{n}/"
+    return [(f"gemm_tune_guided/{hw.name}/N{n}/"
              f"eval{guided.evaluated}of{guided.candidates_total}/{verdict}",
              guided.best.seconds * 1e6, frac)]
 
 
-def tune_square_paper_faithful(n: int = N_PAPER, dtype=jnp.bfloat16):
+def tune_square_paper_faithful(n: int = N_PAPER, dtype=jnp.bfloat16,
+                               hardware=None):
     """The paper's exact 1-parameter sweep: square tiles T (Fig. 3)."""
+    hw = _target(hardware)
     rows = []
     for t in (128, 256, 512):
         cfg = square(t)
-        if not cfg.fits(TPU_V5E, dtype):
+        if not cfg.fits(hw, dtype):
             continue
-        c = gemm_cost(n, n, n, cfg, TPU_V5E, dtype)
-        rows.append((f"gemm_tune_square/tpu-v5e/T{t}/N{n}",
+        c = gemm_cost(n, n, n, cfg, hw, dtype)
+        rows.append((f"gemm_tune_square/{hw.name}/T{t}/N{n}",
                      c.total_s * 1e6, c.tflops * 1000))
     return rows
 
@@ -79,40 +96,41 @@ def tune_square_paper_faithful(n: int = N_PAPER, dtype=jnp.bfloat16):
 def tune_host_measured(n: int = 256, dtype=jnp.float32, repeats: int = 2):
     """Measured wall-clock sweep on this host (pallas-interpret, small N)."""
     res = sweep_gemm(n, n, n, dtype=dtype, mode="measure",
-                     space=INTERPRET_SPACE, hardware=HOST_CPU,
+                     space=INTERPRET_SPACE, hardware=CPU_INTERPRET,
                      backend="pallas-interpret", repeats=repeats, record=False)
     rows = []
     for p in sorted(res.points, key=lambda p: p.seconds)[:5]:
-        rows.append((f"gemm_tune/host-interpret/N{n}/{p.config.label}",
-                     p.seconds * 1e6, p.gflops))
+        rows.append((f"gemm_tune/{CPU_INTERPRET.name}/measured/N{n}/"
+                     f"{p.config.label}", p.seconds * 1e6, p.gflops))
     return rows
 
 
-def tab4_optima(sizes=(N_PAPER, N_CONTROL)):
+def tab4_optima(sizes=(N_PAPER, N_CONTROL), hardware=None):
     """Tab. 4 analogue: per-(hardware, dtype, N) optimum tile."""
+    hw = _target(hardware)
     rows = []
     for dtype in (jnp.bfloat16, jnp.float32):
         for n in sizes:
             res = sweep_gemm(n, n, n, dtype=dtype, mode="model",
-                             hardware=TPU_V5E, record=False)
+                             hardware=hw, record=False)
             b = res.best
-            rows.append((f"tab4/tpu-v5e/{jnp.dtype(dtype).name}/N{n}/"
+            rows.append((f"tab4/{hw.name}/{jnp.dtype(dtype).name}/N{n}/"
                          f"best={b.config.label}", b.seconds * 1e6, b.gflops))
     return rows
 
 
-def run(smoke: bool = False) -> List[tuple]:
+def run(smoke: bool = False, hardware: Optional[str] = None) -> List[tuple]:
     rows = []
     if smoke:
-        rows += tune_tpu_model(N_SMOKE)[:6]
-        rows += guided_vs_exhaustive(N_SMOKE)
-        rows += tune_square_paper_faithful(N_SMOKE)
+        rows += tune_target_model(N_SMOKE, hardware=hardware)[:6]
+        rows += guided_vs_exhaustive(N_SMOKE, hardware=hardware)
+        rows += tune_square_paper_faithful(N_SMOKE, hardware=hardware)
         rows += tune_host_measured(64, repeats=1)
-        rows += tab4_optima(sizes=(N_SMOKE,))
+        rows += tab4_optima(sizes=(N_SMOKE,), hardware=hardware)
         return rows
-    rows += tune_tpu_model()[:6]
-    rows += guided_vs_exhaustive()
-    rows += tune_square_paper_faithful()
+    rows += tune_target_model(hardware=hardware)[:6]
+    rows += guided_vs_exhaustive(hardware=hardware)
+    rows += tune_square_paper_faithful(hardware=hardware)
     rows += tune_host_measured()
-    rows += tab4_optima()
+    rows += tab4_optima(hardware=hardware)
     return rows

@@ -12,25 +12,27 @@ import jax.numpy as jnp
 
 from repro.core import TPU_V5E, HOST_CPU, TileConfig, sweep_gemm
 from repro.core.cost_model import gemm_cost
+from repro.core.hardware import resolve_profile
 
 UNTUNED = TileConfig(128, 128, 128)
 
 
-def run() -> List[tuple]:
+def run(hardware=None) -> List[tuple]:
+    hw = resolve_profile(hardware, default=TPU_V5E)
     rows = []
     for dtype in (jnp.bfloat16, jnp.float32):
-        peak = TPU_V5E.peak_for(dtype)
+        peak = hw.peak_for(dtype)
         best_frac, un_frac = 0.0, 0.0
         for n in range(2048, 20481, 2048):
             tuned = sweep_gemm(n, n, n, dtype=dtype, mode="model",
-                               hardware=TPU_V5E, record=False).best.config
-            ct = gemm_cost(n, n, n, tuned, TPU_V5E, dtype)
-            cu = gemm_cost(n, n, n, UNTUNED, TPU_V5E, dtype)
+                               hardware=hw, record=False).best.config
+            ct = gemm_cost(n, n, n, tuned, hw, dtype)
+            cu = gemm_cost(n, n, n, UNTUNED, hw, dtype)
             best_frac = max(best_frac, ct.tflops * 1e12 / peak)
             un_frac = max(un_frac, cu.tflops * 1e12 / peak)
         name = jnp.dtype(dtype).name
-        rows.append((f"relative_peak/tpu-v5e/{name}/tuned", 0.0, best_frac))
-        rows.append((f"relative_peak/tpu-v5e/{name}/untuned", 0.0, un_frac))
+        rows.append((f"relative_peak/{hw.name}/{name}/tuned", 0.0, best_frac))
+        rows.append((f"relative_peak/{hw.name}/{name}/untuned", 0.0, un_frac))
 
     # measured host reference (xla := vendor-library baseline of the paper)
     n = 1024

@@ -24,31 +24,42 @@ SUITES = ["gemm_tuning", "attention_tuning", "gemm_scaling", "relative_peak",
           "ratio_model", "model_step", "roofline_summary", "serving"]
 
 
-def _run_suite(suite: str, smoke: bool):
+def _run_suite(suite: str, smoke: bool, hardware=None):
     mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
+    params = inspect.signature(mod.run).parameters
     kwargs = {}
-    if smoke and "smoke" in inspect.signature(mod.run).parameters:
+    if smoke and "smoke" in params:
         kwargs["smoke"] = True
+    if hardware is not None and "hardware" in params:
+        kwargs["hardware"] = hardware
     return list(mod.run(**kwargs))
 
 
 def main(argv=None) -> int:
+    from repro.core.hardware import resolve_hardware
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("suites", nargs="*", default=None,
                     help=f"suites to run (default: all of {SUITES})")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problem sizes for CI smoke runs")
+    ap.add_argument("--hardware", default=None,
+                    help="hardware profile for suites that tune per backend "
+                         "(default: $REPRO_HARDWARE or auto-detect; threaded "
+                         "to every suite with a hardware parameter)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="also write rows to this JSON file")
     args = ap.parse_args(argv)
 
+    hardware = resolve_hardware(args.hardware)
     wanted = args.suites or SUITES
     all_rows = []
     failed = 0
+    print(f"# hardware={hardware}")
     print("name,us_per_call,derived")
     for suite in wanted:
         try:
-            for name, us, derived in _run_suite(suite, args.smoke):
+            for name, us, derived in _run_suite(suite, args.smoke, hardware):
                 print(f"{name},{us:.2f},{derived:.4g}", flush=True)
                 all_rows.append({"name": name, "us_per_call": us,
                                  "derived": derived})
@@ -59,8 +70,8 @@ def main(argv=None) -> int:
 
     if args.json_path:
         with open(args.json_path, "w") as f:
-            json.dump({"smoke": args.smoke, "suites": wanted,
-                       "rows": all_rows}, f, indent=1)
+            json.dump({"smoke": args.smoke, "hardware": hardware,
+                       "suites": wanted, "rows": all_rows}, f, indent=1)
             f.write("\n")
         print(f"# wrote {len(all_rows)} rows -> {args.json_path}",
               file=sys.stderr)

@@ -38,7 +38,7 @@ def _best_split(fn, repeats: int):
     return best
 
 
-def run(smoke: bool = False) -> List[tuple]:
+def run(smoke: bool = False, hardware=None) -> List[tuple]:
     batch = 8
     plen = 16
     max_new = 16 if smoke else 48
@@ -51,7 +51,8 @@ def run(smoke: bool = False) -> List[tuple]:
                for i in range(batch)]
 
     eng = Engine(model, params,
-                 ServeConfig(max_batch=batch, max_len=256, profile=True))
+                 ServeConfig(max_batch=batch, max_len=256, profile=True,
+                             hardware=hardware))
     sync_eng = PerTokenSyncEngine(model, params, max_len=256, profile=True)
     eng.generate(prompts, max_new)                       # compile both paths
     sync_eng.generate(prompts, max_new)
@@ -78,10 +79,13 @@ def run(smoke: bool = False) -> List[tuple]:
     sync_tok_s = new_toks / max(sync_decode_s, 1e-9)
 
     speedup = fused_tok_s / max(sync_tok_s, 1e-9)
-    lookups = eng.stats()["decode_tile_lookups"] or {}
+    stats = eng.stats()
+    lookups = stats["decode_tile_lookups"] or {}
     sources = sorted({v["source"] for v in lookups.values()}) or ["none"]
 
     return [
+        # provenance row: which hardware profile keyed the engine's lookups
+        (f"serving/{ARCH}/hardware/{stats['hardware']}", 0.0, 1.0),
         (f"serving/{ARCH}/prefill_tok_s/B{batch}xP{plen}",
          fused_prefill_s / max(batch * plen, 1) * 1e6, prefill_tok_s),
         (f"serving/{ARCH}/decode_fused_tok_s/B{batch}xN{max_new}",

@@ -65,8 +65,11 @@ print(f"[tune]   flash (8, 8, {hd})         -> {res.best.config.label}")
 # -- 3. serve with the tuned registry in ambient context ---------------------
 # The engine is the production-shaped consumer: a fixed pool of KV-cache
 # slots, ragged prompts (left-pad + masking), and a fused device-resident
-# decode loop with ONE host transfer per generate call.
-eng = Engine(model, params, ServeConfig(max_batch=2))
+# decode loop with ONE host transfer per generate call.  Pin the engine to
+# the profile the sweeps above tuned for (tune_model_gemms defaults to the
+# TPU target) — otherwise hardware auto-detection would key the lookups by
+# this host's profile and the exact hits below would become misses.
+eng = Engine(model, params, ServeConfig(max_batch=2, hardware=TPU_V5E.name))
 outs = eng.generate([[11, 22, 33], [44, 55, 66, 77, 88]], max_new_tokens=6)
 for p, o in zip(([11, 22, 33], [44, 55, 66, 77, 88]), outs):
     print(f"[serve] {p} -> {o}")

@@ -1,0 +1,201 @@
+#!/usr/bin/env python
+"""Benchmark trend gate: diff a fresh BENCH_*.json against its committed baseline.
+
+    python scripts/bench_compare.py BENCH_serving__cpu-interpret.json
+    python scripts/bench_compare.py BENCH_*.json --tolerance 0.5
+    python scripts/bench_compare.py BENCH_serving__cpu-interpret.json --write-baseline
+
+CI runs this after every benchmark smoke: each per-backend artifact
+(``BENCH_<suite>__<hardware>.json``) is compared row-for-row against the copy
+committed under ``benchmarks/baselines/`` and the gate **fails when any
+metric family's best ``derived`` value (throughput-like, higher is better)
+regresses by more than the tolerance** (default ``--tolerance 0.3`` = 30%).
+
+Row names embed run-dependent detail (the winning tile label, a speedup
+value, evaluated/total counts), so rows are grouped into *metric families*
+by normalizing those volatile tokens away; within a family the best
+``derived`` is compared.  Families missing from the fresh run entirely also
+fail the gate — a suite can't silently stop reporting a metric.  Families
+whose ``derived`` is not a throughput (the guided-search evaluated-fraction
+rows, where an efficiency win LOWERS the value) are reported but never
+gated (``NEUTRAL_FAMILY_PREFIXES``).
+
+Tolerances, most specific wins:
+
+* ``--tolerance`` flag (or the ``BENCH_TOLERANCE`` env var) sets the default;
+* the baseline JSON may carry a ``"tolerances"`` map of
+  ``{family-prefix: fraction}`` for noisy families (e.g. wall-clock-measured
+  rows on shared CI runners get a looser bound than deterministic
+  model-scored rows).
+
+Override knob for intentional regressions: re-bless the baseline with
+``--write-baseline`` (which preserves the existing tolerances map) and commit
+the result, or loosen the family's entry in ``"tolerances"``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+DEFAULT_TOLERANCE = 0.30
+
+#: normalizations mapping a volatile row name to its stable metric family
+_VOLATILE = [
+    (re.compile(r"-\d+(\.\d+)?x$"), ""),          # ...speedup-2.27x
+    (re.compile(r"/eval\d+of\d+"), ""),           # guided eval counts
+    (re.compile(r"/winner-[^/]+"), "/winner"),    # winner-match / winner-off
+    (re.compile(r"/best=[^/]+"), "/best"),        # tab4 winning label
+    (re.compile(r"/\d+x\d+(x\d+)?$"), "/cfg"),    # trailing tile/block label
+    (re.compile(r"/\d+shapes/[^/]+$"), "/shapes"),  # lookup-provenance row
+]
+
+
+#: metric families whose ``derived`` is NOT higher-is-better throughput
+#: (e.g. the guided-search rows report the *fraction of the candidate space
+#: evaluated* — an efficiency win LOWERS it) — reported but never gated.
+NEUTRAL_FAMILY_PREFIXES = ("gemm_tune_guided/", "attn_tune_guided/")
+
+
+def family(name: str) -> str:
+    for pat, repl in _VOLATILE:
+        name = pat.sub(repl, name)
+    return name
+
+
+def is_neutral(fam: str) -> bool:
+    return fam.startswith(NEUTRAL_FAMILY_PREFIXES)
+
+
+def families(blob: dict) -> dict:
+    """{family: best derived} over the blob's rows (higher is better)."""
+    out = {}
+    for row in blob.get("rows", []):
+        fam = family(row["name"])
+        val = float(row.get("derived", 0.0))
+        if fam not in out or val > out[fam]:
+            out[fam] = val
+    return out
+
+
+def tolerance_for(fam: str, tolerances: dict, default: float) -> float:
+    best = None
+    for prefix, tol in tolerances.items():
+        if fam.startswith(prefix) and (best is None or len(prefix) > best[0]):
+            best = (len(prefix), float(tol))
+    return best[1] if best else default
+
+
+#: default per-family-prefix tolerances injected into NEW baselines: families
+#: scored by wall clock on shared runners are noisy; model-scored families
+#: are deterministic and keep the strict default.
+DEFAULT_TOLERANCES = {
+    "gemm_tune/cpu-interpret/measured": 0.90,
+    "attn_tune/cpu-interpret/measured": 0.90,
+    "gemm_scaling/host-xla": 0.90,
+    "relative_peak/host-xla": 0.90,
+    "serving/": 0.80,
+}
+
+
+def compare(fresh_path: str, baseline_path: str, default_tol: float) -> int:
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+
+    tolerances = base.get("tolerances", {})
+    fresh_fams = families(fresh)
+    base_fams = families(base)
+
+    failures = []
+    for fam, base_val in sorted(base_fams.items()):
+        tol = tolerance_for(fam, tolerances, default_tol)
+        if fam not in fresh_fams:
+            failures.append(f"{fam}: missing from fresh run "
+                            f"(baseline best={base_val:.4g})")
+            continue
+        val = fresh_fams[fam]
+        if is_neutral(fam):
+            print(f"[bench-compare] info {fam}: {val:.4g} vs {base_val:.4g} "
+                  f"(direction-neutral metric, not gated)")
+            continue
+        if base_val > 0 and val < base_val * (1.0 - tol):
+            failures.append(
+                f"{fam}: derived {val:.4g} < baseline {base_val:.4g} "
+                f"- {tol:.0%} (floor {base_val * (1 - tol):.4g})")
+        else:
+            drift = (val / base_val - 1.0) * 100 if base_val else 0.0
+            print(f"[bench-compare] ok   {fam}: {val:.4g} vs "
+                  f"{base_val:.4g} ({drift:+.1f}%, tol {tol:.0%})")
+    for fam in sorted(set(fresh_fams) - set(base_fams)):
+        print(f"[bench-compare] new  {fam}: {fresh_fams[fam]:.4g} "
+              f"(no baseline; re-bless to start tracking)")
+
+    if failures:
+        print(f"[bench-compare] REGRESSION in {fresh_path} vs {baseline_path}:")
+        for msg in failures:
+            print(f"[bench-compare]   - {msg}")
+        print("[bench-compare] intentional? re-bless with "
+              f"`python scripts/bench_compare.py {os.path.basename(fresh_path)}"
+              " --write-baseline` (or loosen its \"tolerances\" entry) and "
+              "commit the baseline")
+        return 1
+    print(f"[bench-compare] PASS {fresh_path}: "
+          f"{len(base_fams)} metric families within tolerance")
+    return 0
+
+
+def write_baseline(fresh_path: str, baseline_path: str) -> int:
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    tolerances = dict(DEFAULT_TOLERANCES)
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            tolerances = json.load(f).get("tolerances", tolerances)
+    fresh["tolerances"] = tolerances
+    os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+    with open(baseline_path, "w") as f:
+        json.dump(fresh, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[bench-compare] blessed {fresh_path} -> {baseline_path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("fresh", nargs="+", help="fresh BENCH_*.json file(s)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help="committed baseline dir (default: benchmarks/baselines)")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE",
+                                                 DEFAULT_TOLERANCE)),
+                    help="default allowed fractional regression "
+                         "(default 0.3; env override BENCH_TOLERANCE)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="bless the fresh file(s) as the new baseline "
+                         "(keeps the existing tolerances map)")
+    args = ap.parse_args(argv)
+
+    rc = 0
+    for fresh_path in args.fresh:
+        baseline_path = os.path.join(args.baseline_dir,
+                                     os.path.basename(fresh_path))
+        if args.write_baseline:
+            rc |= write_baseline(fresh_path, baseline_path)
+            continue
+        if not os.path.exists(baseline_path):
+            print(f"[bench-compare] SKIP {fresh_path}: no committed baseline "
+                  f"at {baseline_path} (bless one with --write-baseline)")
+            continue
+        rc |= compare(fresh_path, baseline_path, args.tolerance)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,10 +3,16 @@
 
     python scripts/tune.py sweep  --hardware tpu-v5e --mode model --op all
     python scripts/tune.py sweep  --hardware tpu-v5e --op flash_attention
-    python scripts/tune.py sweep  --hardware host-cpu --mode measure --shapes 64x64x64
+    python scripts/tune.py sweep  --hardware cpu-interpret --mode measure --op all
+    python scripts/tune.py sweep  --mode measure            # hardware auto-detected
     python scripts/tune.py show   --hardware tpu-v5e
     python scripts/tune.py diff   --hardware tpu-v5e
-    python scripts/tune.py export --hardware tpu-v5e --format markdown
+    python scripts/tune.py export --hardware cpu-interpret --format markdown
+
+``--hardware`` names a registered profile (``tpu-v5e``, ``gpu-generic``,
+``cpu-interpret``; ``host-cpu`` is a legacy alias of ``cpu-interpret``).
+Omitting it resolves via ``$REPRO_HARDWARE`` or ``jax.devices()`` detection —
+the CI backend matrix relies on exactly that.
 
 ``sweep`` writes/updates ``tuned/<hardware>.json`` (the committed paper-Tab.-4
 artifact that serve/train/matmul auto-load); ``--op`` selects the kernel
@@ -28,7 +34,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import tuner, tuning_db  # noqa: E402
-from repro.core.hardware import get_hardware  # noqa: E402
+from repro.core.hardware import get_profile, resolve_hardware  # noqa: E402
 from repro.core.registry import OP_FLASH_ATTENTION, OP_GEMM  # noqa: E402
 from repro.core.tile_config import (  # noqa: E402
     FLASH_INTERPRET_SPACE, INTERPRET_SPACE)
@@ -77,6 +83,16 @@ def _parse_shapes(text):
     return shapes
 
 
+def _resolve_hw(args) -> str:
+    """Canonical profile name for --hardware (None -> env pin / detection)."""
+    name = resolve_hardware(args.hardware)
+    if not args.hardware:
+        print(f"[hw] no --hardware given; resolved to {name!r} "
+              f"(REPRO_HARDWARE or jax.devices() detection)")
+    args.hardware = name
+    return name
+
+
 def _db_path(args) -> str:
     return tuning_db.db_path(args.hardware, args.db_dir)
 
@@ -113,7 +129,7 @@ def _sweep_one_op(op, hw, shapes, dtypes, args):
 
 
 def cmd_sweep(args) -> int:
-    hw = get_hardware(args.hardware)
+    hw = get_profile(_resolve_hw(args))
     ops = [OP_GEMM, OP_FLASH_ATTENTION] if args.op == "all" else [args.op]
     if args.shapes and len(ops) > 1:
         raise SystemExit("error: --shapes requires a single --op")
@@ -142,6 +158,7 @@ def cmd_sweep(args) -> int:
 
 
 def _load_db(args) -> tuning_db.TuningDB:
+    _resolve_hw(args)
     path = _db_path(args)
     if not os.path.exists(path):
         raise SystemExit(f"error: no tuning DB at {path}; "
@@ -156,9 +173,9 @@ def cmd_show(args) -> int:
 
 def cmd_diff(args) -> int:
     """Re-sweep the DB's problems in model mode; report changed winners."""
+    db = _load_db(args)          # resolves --hardware first
     path = _db_path(args)
-    db = _load_db(args)
-    hw = get_hardware(args.hardware)
+    hw = get_profile(args.hardware)
     changed = 0
     for rec in db.records():
         if rec.source != "model":
@@ -201,7 +218,9 @@ def main(argv=None) -> int:
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     def common(p):
-        p.add_argument("--hardware", required=True)
+        p.add_argument("--hardware", default=None,
+                       help="hardware profile (default: $REPRO_HARDWARE or "
+                            "auto-detect from jax.devices())")
         p.add_argument("--db-dir", default=None,
                        help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
 

@@ -11,8 +11,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.catalog import ARCHITECTURES
-from repro.core import capture_gemm_shapes, sweep_shapes, tuning_db
+from repro.core import TPU_V5E, capture_gemm_shapes, sweep_shapes, tuning_db
 from repro.models import build_model
+
+# The TPU target: this script regenerates the committed tpu-v5e DB.  For
+# other backends use the general CLI: scripts/tune.py sweep --hardware ...
+HW = TPU_V5E.name
 
 all_shapes = set()
 for name, cfg in ARCHITECTURES.items():
@@ -27,7 +31,7 @@ for name, cfg in ARCHITECTURES.items():
     all_shapes.update(uniq)
     print(f"{name:26s} {len(shapes):3d} GEMMs, {len(uniq):2d} unique shapes")
 
-print(f"tuning {len(all_shapes)} unique shapes (guided, tpu-v5e, bf16)...")
+print(f"tuning {len(all_shapes)} unique shapes (guided, {HW}, bf16)...")
 results = sweep_shapes(sorted(all_shapes), dtype=jnp.bfloat16, record=False)
 
 # Flash-attention problems: every head dim the zoo uses x the serve engine's
@@ -45,10 +49,10 @@ results += [sweep_flash_attention(sq, skv, d, dtype=jnp.bfloat16,
                                   record=False)
             for (sq, skv, d) in flash_problems]
 
-path = tuning_db.db_path("tpu-v5e")
-db = tuning_db.TuningDB("tpu-v5e")
+path = tuning_db.db_path(HW)
+db = tuning_db.TuningDB(HW)
 if os.path.exists(path):
     db.merge(tuning_db.TuningDB.from_file(path))
-db.merge(tuning_db.db_from_sweeps("tpu-v5e", results))
+db.merge(tuning_db.db_from_sweeps(HW, results))
 db.save(path)
 print(f"wrote {path} with {len(db)} entries")

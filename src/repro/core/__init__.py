@@ -9,7 +9,12 @@ from repro.core.gemm_api import (  # noqa: F401
     ExecutionContext, capture_gemm_shapes, current_hardware, einsum,
     execution_context, matmul,
 )
-from repro.core.hardware import HARDWARE, HOST_CPU, TPU_V5E, get_hardware  # noqa: F401
+from repro.core.hardware import (  # noqa: F401
+    CPU_INTERPRET, GPU_GENERIC, HARDWARE, HOST_CPU, HardwareProfile,
+    HardwareSpec, PLATFORM_CPU_INTERPRET, PLATFORM_GPU, PLATFORM_TPU,
+    PROFILES, TPU_V5E, detect_hardware, get_hardware, get_profile,
+    register_profile, resolve_hardware, resolve_profile,
+)
 from repro.core.registry import (  # noqa: F401
     GLOBAL_REGISTRY, KNOWN_OPS, LookupResult, OP_FLASH_ATTENTION, OP_GEMM,
     TileRegistry, get_tile_config,

@@ -61,7 +61,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     Example::
 
         from repro.core import execution_context, flash_attention
-        with execution_context(hardware="tpu-v5e"):
+        from repro.core.hardware import TPU_V5E
+        with execution_context(hardware=TPU_V5E.name):
             out = flash_attention(q, k, v, causal=True)   # tuned (bq, bk)
     """
     from repro.kernels import flash_attention as fa_kernel
@@ -69,7 +70,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     skv = k.shape[1]
     if bq is None or bk is None:
         ctx = _ctx()
-        cfg = flash_tile_lookup(ctx.hardware, q.dtype, sq, skv, d).config
+        cfg = flash_tile_lookup(ctx.resolve_hardware(), q.dtype,
+                                sq, skv, d).config
         bq = bq if bq is not None else cfg.bq
         bk = bk if bk is not None else cfg.bk
     if interpret is None:

@@ -20,6 +20,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import hardware as hw
 from repro.core.registry import GLOBAL_REGISTRY
 from repro.kernels import ops
 
@@ -32,7 +33,10 @@ def _default_backend() -> str:
 @dataclasses.dataclass
 class ExecutionContext:
     backend: Optional[str] = None       # None -> auto by platform
-    hardware: str = "tpu-v5e"           # registry/tuner key (target hardware)
+    # Registry/tuner key (target hardware profile).  None resolves through
+    # the profile layer: $REPRO_HARDWARE, else jax.devices() detection —
+    # an explicit execution_context(hardware=...) override always wins.
+    hardware: Optional[str] = None
     capture: Optional[List[Tuple[int, int, int]]] = None  # GEMM shape trace
     # When True, 16-bit matmuls emit 16-bit outputs at the tile level, so
     # cross-shard partial-sum all-reduces run in bf16 instead of f32 (halves
@@ -41,6 +45,9 @@ class ExecutionContext:
 
     def resolve_backend(self) -> str:
         return self.backend or _default_backend()
+
+    def resolve_hardware(self) -> str:
+        return hw.resolve_hardware(self.hardware)
 
 
 _TLS = threading.local()
@@ -67,8 +74,13 @@ def execution_context(**overrides):
 
 
 def current_hardware() -> str:
-    """Registry/tuner hardware key of the ambient execution context."""
-    return _ctx().hardware
+    """Resolved registry/tuner hardware key of the ambient execution context.
+
+    Detection order: explicit ``execution_context(hardware=...)`` override,
+    then ``$REPRO_HARDWARE``, then :func:`repro.core.hardware.detect_hardware`
+    over ``jax.devices()``.
+    """
+    return _ctx().resolve_hardware()
 
 
 @contextlib.contextmanager
@@ -133,8 +145,9 @@ def matmul(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
     Example::
 
         from repro.core import execution_context, matmul
+        from repro.core.hardware import TPU_V5E
         with execution_context(backend="pallas-interpret",
-                               hardware="tpu-v5e"):
+                               hardware=TPU_V5E.name):
             y = matmul(x, w, activation="silu")   # tuned tiles, fused SiLU
     """
     ctx = _ctx()
@@ -157,7 +170,8 @@ def matmul(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
         # First lookup lazily pulls committed tuned/<hardware>.json DBs into
         # the global registry, so a fresh process serves tuned tiles with no
         # explicit setup; untuned shapes resolve via nearest-shape fallback.
-        config = GLOBAL_REGISTRY.lookup(ctx.hardware, x.dtype, m, k, n).config
+        config = GLOBAL_REGISTRY.lookup(ctx.resolve_hardware(), x.dtype,
+                                        m, k, n).config
 
     if (ctx.bf16_partials and backend == ops.BACKEND_XLA
             and bias is None and activation is None

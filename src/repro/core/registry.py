@@ -18,9 +18,13 @@ Resolution order for ``lookup_op(op, hardware, dtype, shape)``:
    over the dims, capped by ``NEAREST_MAX_LOG2_DIST``), so untuned
    problems reuse a neighbour's blocks instead of the static default;
 3. **generic** — a shape-agnostic tuned entry for (op, hardware, dtype);
-4. **default** — the built-in per-(op, backend) starting point (the paper's
-   ``#define GPU_ELEM_NUM`` analogue, its ~20%-of-peak baseline);
-5. **fallback** — the op's hardware-agnostic last resort.
+4. **default** — the hardware profile's seeded per-op starting point (the
+   paper's ``#define GPU_ELEM_NUM`` analogue, its ~20%-of-peak baseline) —
+   registering a profile in :mod:`repro.core.hardware` is what gives a new
+   backend this tier;
+5. **fallback** — for an *unregistered* hardware name, the detected host
+   profile's seeds (after a once-per-process warning), else the op's
+   hardware-agnostic last resort.
 
 Nearest-shape scans never cross ops, hardware, or dtypes: exact entries are
 bucketed by the full (op, hardware, dtype) key, so a flash-attention lookup
@@ -40,10 +44,12 @@ import json
 import math
 import os
 import threading
+import warnings
 from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro.core import hardware as hw
 from repro.core.tile_config import FlashAttentionConfig, TileConfig
 
 #: op names — the kernel families the tuning framework knows about
@@ -54,24 +60,46 @@ KNOWN_OPS = (OP_GEMM, OP_FLASH_ATTENTION)
 AnyConfig = Union[TileConfig, FlashAttentionConfig]
 
 # ---------------------------------------------------------------------------
-# Defaults (the #define GPU_ELEM_NUM / OMP_ELEM_NUM analogue): reasonable
-# untuned starting points per (op, backend, dtype) — the paper's "20% of
-# peak" baseline configuration.
+# Defaults (the #define GPU_ELEM_NUM / OMP_ELEM_NUM analogue): the untuned
+# starting point per (op, backend) — the paper's "20% of peak" baseline —
+# now seeded from the hardware-profile layer rather than a table here, so
+# registering a new backend automatically gives it a default tier.
 # ---------------------------------------------------------------------------
-_DEFAULTS: Dict[Tuple[str, str, str], AnyConfig] = {
-    (OP_GEMM, "tpu-v5e", "bfloat16"): TileConfig(128, 128, 128),
-    (OP_GEMM, "tpu-v5e", "float32"): TileConfig(128, 128, 128),
-    (OP_GEMM, "host-cpu", "bfloat16"): TileConfig(32, 32, 32),
-    (OP_GEMM, "host-cpu", "float32"): TileConfig(32, 32, 32),
-    (OP_FLASH_ATTENTION, "tpu-v5e", "bfloat16"): FlashAttentionConfig(128, 128),
-    (OP_FLASH_ATTENTION, "tpu-v5e", "float32"): FlashAttentionConfig(128, 128),
-    (OP_FLASH_ATTENTION, "host-cpu", "bfloat16"): FlashAttentionConfig(32, 32),
-    (OP_FLASH_ATTENTION, "host-cpu", "float32"): FlashAttentionConfig(32, 32),
-}
 _FALLBACK: Dict[str, AnyConfig] = {
     OP_GEMM: TileConfig(128, 128, 128),
     OP_FLASH_ATTENTION: FlashAttentionConfig(128, 128),
 }
+
+#: hardware names already warned about (once-per-process, tests reset it)
+_WARNED_UNKNOWN_HARDWARE = set()
+
+
+def _seeded_default(op: str, hardware: str) -> Tuple[Optional[AnyConfig], str]:
+    """(config, source) for the default tier of ``(op, hardware)``.
+
+    A registered profile (alias-aware) yields its seeded default block with
+    source ``"default"``.  An *unknown* hardware name used to escape as a
+    bare ``KeyError`` from deep inside the lookup path; now it warns once
+    per process and serves the detected host profile's seeded defaults with
+    source ``"fallback"`` — a typo'd or not-yet-registered target degrades
+    loudly instead of crashing mid-serve.
+    """
+    prof = hw.find_profile(hardware)
+    source = "default"
+    if prof is None:
+        detected = hw.detect_hardware()
+        if hardware not in _WARNED_UNKNOWN_HARDWARE:
+            _WARNED_UNKNOWN_HARDWARE.add(hardware)
+            warnings.warn(
+                f"unknown hardware {hardware!r} (known: {sorted(hw.HARDWARE)});"
+                f" falling back to the detected profile {detected!r}'s seeded"
+                f" default blocks", stacklevel=4)
+        prof = hw.find_profile(detected)
+        source = "fallback"
+    block = prof.default_block(op) if prof is not None else None
+    if block is None:
+        return None, source
+    return config_from_block(op, block), source
 
 #: per-op config class — used to rebuild configs from persisted block tuples
 CONFIG_CLASS = {OP_GEMM: TileConfig, OP_FLASH_ATTENTION: FlashAttentionConfig}
@@ -176,8 +204,14 @@ class TileRegistry:
     # -- lookup --------------------------------------------------------
     def lookup_op(self, op: str, hardware: str, dtype,
                   shape: Optional[Tuple[int, ...]] = None) -> LookupResult:
-        """Resolve a config for ``op``, reporting which tier satisfied it."""
+        """Resolve a config for ``op``, reporting which tier satisfied it.
+
+        ``hardware`` is alias-canonicalized (``host-cpu`` -> ``cpu-interpret``)
+        so entries stored under a legacy name and lookups under the new one
+        land in the same bucket.
+        """
         self._ensure_autoloaded()
+        hardware = hw.canonical_name(hardware)
         dt = jnp.dtype(dtype).name
         with self._lock:
             if shape is not None:
@@ -192,9 +226,9 @@ class TileRegistry:
             hit = self._generic.get((op, hardware, dt))
             if hit is not None:
                 return self._count(LookupResult(hit, "generic", op=op))
-        cfg = _DEFAULTS.get((op, hardware, dt))
+        cfg, source = _seeded_default(op, hardware)
         if cfg is not None:
-            return self._count(LookupResult(cfg, "default", op=op))
+            return self._count(LookupResult(cfg, source, op=op))
         return self._count(LookupResult(_FALLBACK[op], "fallback", op=op))
 
     def lookup(self, hardware: str, dtype, m: int = None, k: int = None,
@@ -240,6 +274,9 @@ class TileRegistry:
                shape: Optional[Tuple[int, ...]] = None) -> None:
         if op not in CONFIG_CLASS:
             raise ValueError(f"unknown op {op!r}; known: {sorted(CONFIG_CLASS)}")
+        # Canonicalize legacy aliases on write too, so a tuned/host-cpu.json
+        # loaded into the registry is reachable from cpu-interpret lookups.
+        hardware = hw.canonical_name(hardware)
         dt = jnp.dtype(dtype).name
         with self._lock:
             if shape is None:

@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model
-from repro.core.hardware import HardwareSpec, TPU_V5E, HOST_CPU
+from repro.core.hardware import (HardwareSpec, TPU_V5E, HOST_CPU,
+                                 resolve_profile)
 from repro.core.registry import (GLOBAL_REGISTRY, OP_FLASH_ATTENTION, OP_GEMM,
                                  TileRegistry)
 from repro.core.tile_config import (FlashAttentionConfig, FlashTuningSpace,
@@ -131,12 +132,17 @@ def sweep_gemm(
     registry: Optional[TileRegistry] = None,
     record: bool = True,
 ) -> SweepResult:
-    """Tune tile configs for one GEMM problem; optionally record the winner."""
+    """Tune tile configs for one GEMM problem; optionally record the winner.
+
+    ``hardware`` accepts a :class:`HardwareProfile`, a registered profile
+    name (``"cpu-interpret"``, ...), or ``None`` to auto-detect the host.
+    """
     if mode not in ("model", "measure"):
         raise ValueError(f"unknown mode {mode!r}")
     if search not in (SEARCH_GUIDED, SEARCH_EXHAUSTIVE):
         raise ValueError(f"unknown search {search!r}")
 
+    hardware = resolve_profile(hardware)
     space = space or TuningSpace()
     flops = 2.0 * m * k * n
     cands = list(space.candidates(hardware, dtype, m=m, k=k, n=n))
@@ -206,13 +212,16 @@ def sweep_flash_attention(
     (:func:`repro.core.cost_model.flash_cost`), top-K evaluation, measured
     pruning — applied to the op="flash_attention" candidate space.  The
     problem is identified by ``(sq, skv, d)`` (query length, KV length, head
-    dim); ``batch_heads`` only sizes the measured-mode operands.
+    dim); ``batch_heads`` only sizes the measured-mode operands.  As for
+    :func:`sweep_gemm`, ``hardware`` may be a profile, a name, or ``None``
+    (auto-detect).
     """
     if mode not in ("model", "measure"):
         raise ValueError(f"unknown mode {mode!r}")
     if search not in (SEARCH_GUIDED, SEARCH_EXHAUSTIVE):
         raise ValueError(f"unknown search {search!r}")
 
+    hardware = resolve_profile(hardware)
     space = space or FlashTuningSpace()
     # QK^T + PV: 4 * sq * skv * d per (batch, head) slice, halved if causal.
     flops = 4.0 * sq * skv * d * (0.5 if causal else 1.0)

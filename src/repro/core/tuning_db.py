@@ -157,7 +157,8 @@ class TuningDB:
 
     Example::
 
-        db = TuningDB("tpu-v5e")
+        from repro.core.hardware import TPU_V5E
+        db = TuningDB(TPU_V5E.name)
         db.add(TuningRecord.gemm("bfloat16", 4096, 4096, 4096,
                                  512, 1024, 1024, seconds=8.8e-5))
         db.add(TuningRecord(op="flash_attention", dtype="bfloat16",

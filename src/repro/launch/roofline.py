@@ -1,7 +1,8 @@
 """Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
 
-Three terms per (arch x shape x mesh) cell, all in seconds-per-step on
-TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step against
+one hardware profile's peaks (default: the TPU target — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI; pick another with ``--hardware``):
 
   compute    = HLO_FLOPs_per_device / peak
   memory     = HLO_traffic_bytes_per_device / HBM_bw
@@ -23,21 +24,25 @@ import argparse
 import json
 from typing import Dict, List, Optional
 
-from repro.core.hardware import TPU_V5E
+from repro.core.hardware import HardwareProfile, TPU_V5E, get_profile
 
+# Legacy module-level constants (the TPU target); roofline_row() now reads
+# from whichever profile it is handed instead of these.
 PEAK_BF16 = TPU_V5E.peak_flops["bfloat16"]     # 197e12
 HBM_BW = TPU_V5E.hbm_bandwidth                  # 819e9
 LINK_BW = TPU_V5E.ici_link_bandwidth            # 50e9
 
 
-def roofline_row(rec: dict) -> Optional[dict]:
+def roofline_row(rec: dict,
+                 profile: HardwareProfile = TPU_V5E) -> Optional[dict]:
     if rec.get("status") != "OK":
         return None
+    peak = profile.peak_flops["bfloat16"]
     hs = rec["hlo_stats"]
     chips = rec["chips"]
-    compute_s = hs["flops"] / PEAK_BF16
-    memory_s = hs["traffic_bytes"] / HBM_BW
-    collective_s = hs["collective_link_bytes"] / LINK_BW
+    compute_s = hs["flops"] / peak
+    memory_s = hs["traffic_bytes"] / profile.hbm_bandwidth
+    collective_s = hs["collective_link_bytes"] / profile.ici_link_bandwidth
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     dominant = max(terms, key=terms.get)
@@ -46,9 +51,10 @@ def roofline_row(rec: dict) -> Optional[dict]:
     ratio = model_flops_dev / hs["flops"] if hs["flops"] else 0.0
     # MFU proxy: useful model flops per second vs peak, at the estimated
     # bottleneck-bound step time (the "fraction of roofline" score).
-    mfu = model_flops_dev / est_step / PEAK_BF16 if est_step else 0.0
-    hw_util = hs["flops"] / est_step / PEAK_BF16 if est_step else 0.0
+    mfu = model_flops_dev / est_step / peak if est_step else 0.0
+    hw_util = hs["flops"] / est_step / peak if est_step else 0.0
     return {
+        "hardware": profile.name,
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
         "kind": rec["kind"], "chips": chips,
         "compute_s": compute_s, "memory_s": memory_s,
@@ -100,7 +106,8 @@ def markdown_table(rows: List[dict], skips: List[dict]) -> str:
     return "\n".join(out)
 
 
-def load_rows(path: str, mesh: Optional[str] = None):
+def load_rows(path: str, mesh: Optional[str] = None,
+              profile: HardwareProfile = TPU_V5E):
     with open(path) as f:
         results = json.load(f)
     rows, skips = [], []
@@ -112,13 +119,13 @@ def load_rows(path: str, mesh: Optional[str] = None):
         if rec.get("status") == "SKIP":
             skips.append(rec)
             continue
-        row = roofline_row(rec)
+        row = roofline_row(rec, profile)
         if row:
             rows.append(row)
     return rows, skips
 
 
-def perf_compare(path: str) -> str:
+def perf_compare(path: str, profile: HardwareProfile = TPU_V5E) -> str:
     """§Perf view: baseline vs tagged (hillclimb) runs of the same cell."""
     with open(path) as f:
         results = json.load(f)
@@ -136,7 +143,7 @@ def perf_compare(path: str) -> str:
         entries.sort(key=lambda e: (e[0] != "baseline", e[0]))
         base = None
         for tag, rec in entries:
-            r = roofline_row(rec)
+            r = roofline_row(rec, profile)
             line = (f"  {tag:16s} C={fmt_s(r['compute_s']):>8s} "
                     f"M={fmt_s(r['memory_s']):>8s} X={fmt_s(r['collective_s']):>8s}"
                     f" dom={r['dominant']:10s} step={fmt_s(r['est_step_s']):>8s}"
@@ -155,13 +162,17 @@ def main() -> None:
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--emit", default="text",
                     choices=["text", "markdown", "json", "perf"])
+    ap.add_argument("--hardware", default=TPU_V5E.name,
+                    help="hardware profile whose peaks bound the roofline "
+                         "(default: the TPU tuning target)")
     args = ap.parse_args()
+    profile = get_profile(args.hardware)
 
     if args.emit == "perf":
-        print(perf_compare(args.results))
+        print(perf_compare(args.results, profile))
         return
 
-    rows, skips = load_rows(args.results, args.mesh)
+    rows, skips = load_rows(args.results, args.mesh, profile)
     if args.emit == "json":
         print(json.dumps(rows, indent=1))
         return

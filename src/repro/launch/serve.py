@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.catalog import get_config
 from repro.core import tuning_db
+from repro.core.hardware import find_profile, resolve_hardware
 from repro.core.registry import GLOBAL_REGISTRY
 from repro.models import build_model
 from repro.serve import Engine, ServeConfig
@@ -35,9 +36,18 @@ def main() -> None:
                          "(flash = tuned Pallas kernel for prefill)")
     ap.add_argument("--stats", action="store_true",
                     help="print engine stats (throughput, tile provenance)")
+    ap.add_argument("--hardware", default=None,
+                    help="hardware profile the engine tunes against "
+                         "(default: $REPRO_HARDWARE or auto-detect)")
     ap.add_argument("--tuned-dir", default=None,
                     help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
     args = ap.parse_args()
+
+    hardware = resolve_hardware(args.hardware)
+    prof = find_profile(hardware)
+    print(f"[hw] profile={hardware} "
+          f"platform={prof.platform if prof else 'unknown'} "
+          f"({'flag' if args.hardware else 'detected'})")
 
     loaded = tuning_db.load_all(GLOBAL_REGISTRY, args.tuned_dir)
     for path, count in loaded.items():
@@ -63,7 +73,8 @@ def main() -> None:
     eng = Engine(model, params,
                  ServeConfig(max_batch=args.max_batch or len(prompts),
                              temperature=args.temperature,
-                             profile=args.stats))
+                             profile=args.stats,
+                             hardware=hardware))
     outs = eng.generate(prompts, args.max_new, extra_inputs=extra or None)
     for p, o in zip(prompts, outs):
         print(f"prompt={p} -> {o}")
@@ -72,7 +83,8 @@ def main() -> None:
         st = eng.stats()
         toks = st["tokens_generated"]
         dec_s = st["decode_seconds"] or 1e-9
-        print(f"[stats] {int(toks)} tokens, {int(st['waves'])} wave(s), "
+        print(f"[stats] hw={st['hardware']} ({st['hardware_platform']}), "
+              f"{int(toks)} tokens, {int(st['waves'])} wave(s), "
               f"{int(st['device_transfers'])} host transfer(s), "
               f"decode {toks / dec_s:.0f} tok/s")
         for shape, info in (st["decode_tile_lookups"] or {}).items():

@@ -19,7 +19,8 @@ import jax
 
 from repro.checkpoint import Checkpointer
 from repro.configs.catalog import get_config
-from repro.core import tuning_db
+from repro.core import execution_context, tuning_db
+from repro.core.hardware import resolve_hardware
 from repro.core.registry import GLOBAL_REGISTRY
 from repro.data import DataConfig, TokenPipeline
 from repro.distributed import sharding as sh
@@ -47,9 +48,16 @@ def main() -> None:
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--step-deadline-s", type=float, default=None)
+    ap.add_argument("--hardware", default=None,
+                    help="hardware profile for tile lookups "
+                         "(default: $REPRO_HARDWARE or auto-detect)")
     ap.add_argument("--tuned-dir", default=None,
                     help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
     args = ap.parse_args()
+
+    hardware = resolve_hardware(args.hardware)
+    print(f"[hw] profile={hardware} "
+          f"({'flag' if args.hardware else 'detected'})")
 
     loaded = tuning_db.load_all(GLOBAL_REGISTRY, args.tuned_dir)
     for path, count in loaded.items():
@@ -93,7 +101,8 @@ def main() -> None:
         state = init_train_state(model, opt, jax.random.PRNGKey(0),
                                  args.compress_grads)
 
-    state, history = trainer.run(state, start_step=start)
+    with execution_context(hardware=hardware):
+        state, history = trainer.run(state, start_step=start)
     for step, loss in history:
         print(f"step {step:6d}  loss {loss:.4f}")
     print(f"done at step {int(state.step)}")

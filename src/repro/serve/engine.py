@@ -55,6 +55,10 @@ class ServeConfig:
     eos_token: Optional[int] = None
     seed: int = 0
     profile: bool = False             # block after prefill to split timings
+    # Hardware profile the engine tunes against (registry key).  None uses
+    # the ambient execution context's resolution: explicit override >
+    # $REPRO_HARDWARE > jax.devices() detection.
+    hardware: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -104,9 +108,17 @@ class Engine:
     """
 
     def __init__(self, model: Model, params, cfg: ServeConfig):
+        from repro.core import current_hardware
+        from repro.core.hardware import find_profile, resolve_hardware
         self.model = model
         self.params = params
         self.cfg = cfg
+        # Resolved once at engine construction so every tile lookup (and the
+        # stats provenance) is pinned to one profile for the engine's life.
+        self.hardware = (resolve_hardware(cfg.hardware) if cfg.hardware
+                         else current_hardware())
+        prof = find_profile(self.hardware)
+        self._platform = prof.platform if prof else "unknown"
         self._prefill = jax.jit(model.prefill)
         self._loop = None                 # built lazily (per-engine closure)
         self._cache = None                # allocated once, reused across calls
@@ -192,7 +204,7 @@ class Engine:
     def _trace_decode_tiles(self) -> None:
         """Abstractly trace one decode step, resolve its GEMM shapes against
         the tuned-tile registry, and record the lookup provenance."""
-        from repro.core import capture_gemm_shapes, current_hardware
+        from repro.core import capture_gemm_shapes
         from repro.core.registry import GLOBAL_REGISTRY
         b = self.cfg.max_batch
         tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
@@ -205,7 +217,7 @@ class Engine:
         except Exception:      # provenance is telemetry, never fatal
             self._tile_lookups = {}
             return
-        hw = current_hardware()
+        hw = self.hardware
         dtype = self.model.cfg.dtype
         lookups = {}
         for (m, k, n) in sorted(set(shapes)):
@@ -232,9 +244,8 @@ class Engine:
         key = f"{plen}x{plen}x{cfg.resolved_head_dim}"
         if key in self._prefill_flash_lookups:
             return
-        from repro.core import current_hardware
         from repro.core.attention_api import flash_tile_lookup
-        res = flash_tile_lookup(current_hardware(), cfg.dtype, plen, plen,
+        res = flash_tile_lookup(self.hardware, cfg.dtype, plen, plen,
                                 cfg.resolved_head_dim)
         self._prefill_flash_lookups[key] = {
             "source": res.source,
@@ -290,17 +301,23 @@ class Engine:
         Returns:
           ``{request_id: generated token list}`` for every drained request.
         """
+        from repro.core import execution_context
         results: Dict[int, List[int]] = {}
         # One key per run, split per wave: waves draw decorrelated samples
         # while repeated runs stay deterministic for a fixed seed.
         key = jax.random.PRNGKey(self.cfg.seed)
-        while self._queue:
-            wave = [self._queue.pop(0)
-                    for _ in range(min(len(self._queue), self.cfg.max_batch))]
-            key, wave_key = jax.random.split(key)
-            self._run_wave(wave, extra_inputs, wave_key)
-            for r in wave:
-                results[r.rid] = r.tokens
+        # Pin the ambient hardware profile for the whole drain so the model
+        # path's tile lookups (traced inside jit) resolve against the same
+        # profile the engine reports in stats().
+        with execution_context(hardware=self.hardware):
+            while self._queue:
+                wave = [self._queue.pop(0)
+                        for _ in range(min(len(self._queue),
+                                           self.cfg.max_batch))]
+                key, wave_key = jax.random.split(key)
+                self._run_wave(wave, extra_inputs, wave_key)
+                for r in wave:
+                    results[r.rid] = r.tokens
         return results
 
     # -- batched generation ---------------------------------------------
@@ -428,6 +445,9 @@ class Engine:
         Beyond the raw counters (requests, tokens, waves, timings), the
         tuning-framework telemetry:
 
+        * ``hardware`` / ``hardware_platform`` — the resolved hardware
+          profile every tile lookup below was keyed by (provenance for
+          bench artifacts and the CI backend matrix);
         * ``decode_tile_lookups`` — each decode-step GEMM shape mapped to
           its resolved tile and provenance tier
           (``exact``/``nearest``/``generic``/``default``/``fallback``);
@@ -445,6 +465,8 @@ class Engine:
         """
         from repro.core.registry import GLOBAL_REGISTRY
         out = dict(self._stats)
+        out["hardware"] = self.hardware
+        out["hardware_platform"] = self._platform
         out["slots"] = self.cfg.max_batch
         out["slots_admitted"] = self._sched.admitted
         out["slots_evicted"] = self._sched.evicted
