@@ -24,7 +24,7 @@ SUITES = ["gemm_tuning", "attention_tuning", "gemm_scaling", "relative_peak",
           "ratio_model", "model_step", "roofline_summary", "serving"]
 
 
-def _run_suite(suite: str, smoke: bool, hardware=None):
+def _run_suite(suite: str, smoke: bool, hardware=None, mesh=None):
     mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
     params = inspect.signature(mod.run).parameters
     kwargs = {}
@@ -32,6 +32,8 @@ def _run_suite(suite: str, smoke: bool, hardware=None):
         kwargs["smoke"] = True
     if hardware is not None and "hardware" in params:
         kwargs["hardware"] = hardware
+    if mesh is not None and "mesh" in params:
+        kwargs["mesh"] = mesh
     return list(mod.run(**kwargs))
 
 
@@ -47,6 +49,10 @@ def main(argv=None) -> int:
                     help="hardware profile for suites that tune per backend "
                          "(default: $REPRO_HARDWARE or auto-detect; threaded "
                          "to every suite with a hardware parameter)")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh spec ('data=N,model=M' | 'auto') for "
+                         "suites that shard (threaded to every suite with a "
+                         "mesh parameter; needs that many visible devices)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="also write rows to this JSON file")
     args = ap.parse_args(argv)
@@ -55,11 +61,12 @@ def main(argv=None) -> int:
     wanted = args.suites or SUITES
     all_rows = []
     failed = 0
-    print(f"# hardware={hardware}")
+    print(f"# hardware={hardware} mesh={args.mesh or 'none'}")
     print("name,us_per_call,derived")
     for suite in wanted:
         try:
-            for name, us, derived in _run_suite(suite, args.smoke, hardware):
+            for name, us, derived in _run_suite(suite, args.smoke, hardware,
+                                                args.mesh):
                 print(f"{name},{us:.2f},{derived:.4g}", flush=True)
                 all_rows.append({"name": name, "us_per_call": us,
                                  "derived": derived})
@@ -71,7 +78,8 @@ def main(argv=None) -> int:
     if args.json_path:
         with open(args.json_path, "w") as f:
             json.dump({"smoke": args.smoke, "hardware": hardware,
-                       "suites": wanted, "rows": all_rows}, f, indent=1)
+                       "mesh": args.mesh, "suites": wanted,
+                       "rows": all_rows}, f, indent=1)
             f.write("\n")
         print(f"# wrote {len(all_rows)} rows -> {args.json_path}",
               file=sys.stderr)

@@ -38,7 +38,7 @@ def _best_split(fn, repeats: int):
     return best
 
 
-def run(smoke: bool = False, hardware=None) -> List[tuple]:
+def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
     batch = 8
     plen = 16
     max_new = 16 if smoke else 48
@@ -52,7 +52,7 @@ def run(smoke: bool = False, hardware=None) -> List[tuple]:
 
     eng = Engine(model, params,
                  ServeConfig(max_batch=batch, max_len=256, profile=True,
-                             hardware=hardware))
+                             hardware=hardware, mesh=mesh))
     sync_eng = PerTokenSyncEngine(model, params, max_len=256, profile=True)
     eng.generate(prompts, max_new)                       # compile both paths
     sync_eng.generate(prompts, max_new)
@@ -83,9 +83,14 @@ def run(smoke: bool = False, hardware=None) -> List[tuple]:
     lookups = stats["decode_tile_lookups"] or {}
     sources = sorted({v["source"] for v in lookups.values()}) or ["none"]
 
+    mesh_info = stats["mesh"]
+    mesh_label = ("x".join(f"{a}{s}" for a, s in mesh_info["axes"].items())
+                  if mesh_info["axes"] else "none")
     return [
-        # provenance row: which hardware profile keyed the engine's lookups
+        # provenance rows: hardware profile + mesh topology keying the run
         (f"serving/{ARCH}/hardware/{stats['hardware']}", 0.0, 1.0),
+        (f"serving/{ARCH}/mesh/{mesh_label}", 0.0,
+         float(mesh_info["devices"])),
         (f"serving/{ARCH}/prefill_tok_s/B{batch}xP{plen}",
          fused_prefill_s / max(batch * plen, 1) * 1e6, prefill_tok_s),
         (f"serving/{ARCH}/decode_fused_tok_s/B{batch}xN{max_new}",

@@ -15,7 +15,12 @@ Row names embed run-dependent detail (the winning tile label, a speedup
 value, evaluated/total counts), so rows are grouped into *metric families*
 by normalizing those volatile tokens away; within a family the best
 ``derived`` is compared.  Families missing from the fresh run entirely also
-fail the gate — a suite can't silently stop reporting a metric.  Families
+fail the gate — a suite can't silently stop reporting a metric — and a
+family whose baseline is nonzero but whose fresh best drops to zero fails
+regardless of tolerance (the metric went dead).  A family whose *baseline*
+``derived`` is zero cannot anchor a relative gate: it is reported as an
+explicit warning (never silently passed) until the baseline is re-blessed
+with a real value.  Families
 whose ``derived`` is not a throughput (the guided-search evaluated-fraction
 rows, where an efficiency win LOWERS the value) are reported but never
 gated (``NEUTRAL_FAMILY_PREFIXES``).
@@ -124,12 +129,26 @@ def compare(fresh_path: str, baseline_path: str, default_tol: float) -> int:
             print(f"[bench-compare] info {fam}: {val:.4g} vs {base_val:.4g} "
                   f"(direction-neutral metric, not gated)")
             continue
-        if base_val > 0 and val < base_val * (1.0 - tol):
+        if base_val <= 0:
+            # A zero baseline can't anchor a relative gate — say so loudly
+            # instead of silently counting the family as passing.  Fix by
+            # re-blessing once the family reports a real value.
+            print(f"[bench-compare] warn {fam}: baseline is {base_val:.4g} "
+                  f"(fresh {val:.4g}) — zero baseline cannot gate; re-bless "
+                  f"to start tracking")
+            continue
+        if val <= 0:
+            # a previously-nonzero family collapsing to zero is a breakage
+            # (the metric stopped being measured), whatever the tolerance
+            failures.append(
+                f"{fam}: derived dropped to {val:.4g} "
+                f"(baseline {base_val:.4g}) — metric went dead")
+        elif val < base_val * (1.0 - tol):
             failures.append(
                 f"{fam}: derived {val:.4g} < baseline {base_val:.4g} "
                 f"- {tol:.0%} (floor {base_val * (1 - tol):.4g})")
         else:
-            drift = (val / base_val - 1.0) * 100 if base_val else 0.0
+            drift = (val / base_val - 1.0) * 100
             print(f"[bench-compare] ok   {fam}: {val:.4g} vs "
                   f"{base_val:.4g} ({drift:+.1f}%, tol {tol:.0%})")
     for fam in sorted(set(fresh_fams) - set(base_fams)):

@@ -1,4 +1,8 @@
+from repro.distributed.ctx import (  # noqa: F401
+    constrain, current_mesh, current_rules, use_mesh,
+)
 from repro.distributed.sharding import (  # noqa: F401
-    ShardingRules, batch_shardings, cache_shardings, param_shardings,
-    param_specs, rules_for_mesh,
+    ShardingRules, batch_shardings, cache_shardings, local_gemm_divisors,
+    param_shardings, param_specs, rules_for_mesh, shard_params,
+    sharding_summary,
 )

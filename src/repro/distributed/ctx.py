@@ -8,6 +8,12 @@ explicit ``with_sharding_constraint`` pins on the residual stream and logits.
 Model code stays mesh-agnostic: it calls ``constrain(x, kind)``; the policy
 (mesh + rules) is installed by the launcher/trainer around tracing, and the
 call is a no-op when no policy is installed (single-device tests).
+
+This module is also the *topology layer*: :func:`use_mesh` installs an
+ambient ``(mesh, rules)`` pair that mesh-aware consumers (``serve.Engine``,
+``Model.init``, launchers) pick up via :func:`current_mesh` /
+:func:`current_rules` when they are not handed one explicitly — the
+distribution-layer analogue of ``execution_context(hardware=...)``.
 """
 from __future__ import annotations
 
@@ -70,6 +76,58 @@ def activation_policy(mesh: Mesh, rules):
         yield
     finally:
         set_policy(old)
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh topology (the --mesh knob, as a context)
+# ---------------------------------------------------------------------------
+
+def set_mesh(mesh: Optional[Mesh], rules=None):
+    _TLS.mesh = mesh
+    _TLS.rules = rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The ambient mesh installed by :func:`use_mesh` (None = single device)."""
+    return getattr(_TLS, "mesh", None)
+
+
+def current_rules():
+    """The ambient :class:`ShardingRules` installed by :func:`use_mesh`."""
+    return getattr(_TLS, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules=None):
+    """Install ``(mesh, rules)`` as the ambient topology.
+
+    Derives ``rules`` via ``rules_for_mesh`` when omitted, and installs the
+    matching activation policy so every ``constrain`` call inside the scope
+    pins to this mesh.  ``use_mesh(None)`` *clears* the ambient topology for
+    the scope — inside an outer ``use_mesh(mesh)`` it restores single-device
+    behavior (e.g. to build an unsharded reference engine for parity checks).
+    """
+    if mesh is None:
+        old = (current_mesh(), current_rules())
+        old_policy = get_policy()
+        set_mesh(None, None)
+        set_policy(None)
+        try:
+            yield None
+        finally:
+            set_mesh(*old)
+            set_policy(old_policy)
+        return
+    if rules is None:
+        from repro.distributed.sharding import rules_for_mesh
+        rules = rules_for_mesh(mesh)
+    old = (current_mesh(), current_rules())
+    set_mesh(mesh, rules)
+    try:
+        with activation_policy(mesh, rules):
+            yield rules
+    finally:
+        set_mesh(*old)
 
 
 def constrain(x: jax.Array, kind: str) -> jax.Array:

@@ -65,6 +65,11 @@ def _axis_size(mesh: Mesh, axis) -> int:
     return mesh.shape[axis]
 
 
+#: public alias — consumers (serve engine telemetry) need the same
+#: axis-or-axes size resolution the spec builders use
+axis_size = _axis_size
+
+
 def spec_for_param(mesh: Mesh, rules: ShardingRules, spec: ParamSpec) -> P:
     if len(spec.shape) <= 1:
         return P()
@@ -91,6 +96,57 @@ def param_shardings(mesh: Mesh, rules: ShardingRules, template):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, spec_for_param(mesh, rules, s)),
         template, is_leaf=is_spec)
+
+
+def shard_params(params, mesh: Mesh, rules: ShardingRules, template):
+    """Place an (already materialized) param pytree by the rules.
+
+    ``jax.device_put`` reshards committed arrays in place, so this works both
+    for fresh ``init_params`` output and for checkpoint-restored params.
+    """
+    return jax.device_put(params, param_shardings(mesh, rules, template))
+
+
+def sharding_summary(mesh: Mesh, rules: ShardingRules, template) -> dict:
+    """JSON-friendly provenance: how many param leaves each spec shape got.
+
+    e.g. ``{"('data', 'model')": 9, "()": 14}`` — surfaced by
+    ``Engine.stats()["sharding"]`` next to the rules' axis mapping.
+    """
+    counts: dict = {}
+    for spec in jax.tree_util.tree_leaves(template, is_leaf=is_spec):
+        key = str(tuple(spec_for_param(mesh, rules, spec)))
+        counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
+def local_gemm_divisors(mesh: Mesh, rules: ShardingRules, template):
+    """``{(k, n): ((div_k, div_n), ...)}`` over the template's matmul weights.
+
+    A GEMM traced with *global* operand shapes runs per shard on the
+    *local* shapes ``(m/div_m, k/div_k, n/div_n)`` — under TP the tuned-tile
+    entry that actually matters is the local one.  The last two dims of each
+    >=2-D param are the ``(K, N)`` the single matmul entry point sees (scanned
+    stacks index their leading layer axis away), and the divisor of a dim is
+    the size of the mesh axes its spec shards it over.
+
+    Two weights can share a global ``(K, N)`` but shard it differently —
+    e.g. square attention projections, where ``wq`` is ``(embed, ff)`` but
+    ``wo`` is ``(ff, embed)`` — so every *distinct* divisor pair is returned
+    (sorted, deterministic) and consumers surface each local variant rather
+    than silently picking whichever leaf the pytree happens to visit first.
+    """
+    out: dict = {}
+    for spec in jax.tree_util.tree_leaves(template, is_leaf=is_spec):
+        if len(spec.shape) < 2:
+            continue
+        sp = spec_for_param(mesh, rules, spec)
+        padded = tuple(sp) + (None,) * (len(spec.shape) - len(tuple(sp)))
+        k, n = spec.shape[-2], spec.shape[-1]
+        dk = _axis_size(mesh, padded[len(spec.shape) - 2])
+        dn = _axis_size(mesh, padded[len(spec.shape) - 1])
+        out.setdefault((k, n), set()).add((dk, dn))
+    return {key: tuple(sorted(vals)) for key, vals in out.items()}
 
 
 # ---------------------------------------------------------------------------

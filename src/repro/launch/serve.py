@@ -5,6 +5,12 @@
 
 Ragged prompt lengths are handled natively (left-pad + masking); more
 prompts than ``--max-batch`` are served in waves over the fixed slot pool.
+``--mesh data=4,model=2`` (or ``--mesh auto``) shards params/KV-cache/batch
+over a device mesh — token-for-token identical to the single-device run:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+      --mesh data=4,model=2 --stats
 """
 from __future__ import annotations
 
@@ -39,6 +45,9 @@ def main() -> None:
     ap.add_argument("--hardware", default=None,
                     help="hardware profile the engine tunes against "
                          "(default: $REPRO_HARDWARE or auto-detect)")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh spec: 'data=N,model=M' or 'auto' "
+                         "(default: single-device)")
     ap.add_argument("--tuned-dir", default=None,
                     help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
     args = ap.parse_args()
@@ -48,6 +57,11 @@ def main() -> None:
     print(f"[hw] profile={hardware} "
           f"platform={prof.platform if prof else 'unknown'} "
           f"({'flag' if args.hardware else 'detected'})")
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import build_mesh, describe_mesh
+        mesh = build_mesh(args.mesh)
+        print(f"[mesh] {describe_mesh(mesh)}")
 
     loaded = tuning_db.load_all(GLOBAL_REGISTRY, args.tuned_dir)
     for path, count in loaded.items():
@@ -74,7 +88,8 @@ def main() -> None:
                  ServeConfig(max_batch=args.max_batch or len(prompts),
                              temperature=args.temperature,
                              profile=args.stats,
-                             hardware=hardware))
+                             hardware=hardware,
+                             mesh=mesh))
     outs = eng.generate(prompts, args.max_new, extra_inputs=extra or None)
     for p, o in zip(prompts, outs):
         print(f"prompt={p} -> {o}")
@@ -87,9 +102,15 @@ def main() -> None:
               f"{int(toks)} tokens, {int(st['waves'])} wave(s), "
               f"{int(st['device_transfers'])} host transfer(s), "
               f"decode {toks / dec_s:.0f} tok/s")
+        print(f"[stats] mesh={st['mesh']}")
+        if st["sharding"]:
+            print(f"[stats] sharding rules={st['sharding']['rules']} "
+                  f"params={st['sharding']['params']}")
         for shape, info in (st["decode_tile_lookups"] or {}).items():
+            local = (f" local={info['local_shape']}"
+                     if "local_shape" in info else "")
             print(f"[tiles] decode GEMM {shape:>16s} -> {info['tile']} "
-                  f"({info['source']})")
+                  f"({info['source']}){local}")
         for shape, info in (st["prefill_flash_lookups"] or {}).items():
             print(f"[tiles] prefill flash {shape:>14s} -> {info['tile']} "
                   f"({info['source']})")

@@ -7,8 +7,10 @@ On a real cluster this runs once per host under the usual multi-host jax
 bootstrap (jax.distributed.initialize); the mesh/rules/elastic-restore logic
 is identical.  ``--resume`` restarts from the latest checkpoint (the
 fault-tolerance path: deterministic data + atomic checkpoints = exact
-replay).  ``--mesh-data/--mesh-model`` build a device mesh when the host
-exposes multiple devices.
+replay).  ``--mesh data=N,model=M`` (or the legacy
+``--mesh-data/--mesh-model`` pair) builds a device mesh when the host
+exposes multiple devices; the train step is then jit-sharded — params by
+the sharding rules, the batch over the data axes.
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ from repro.core.hardware import resolve_hardware
 from repro.core.registry import GLOBAL_REGISTRY
 from repro.data import DataConfig, TokenPipeline
 from repro.distributed import sharding as sh
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import build_mesh, describe_mesh, make_host_mesh
 from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
 from repro.train import (Trainer, TrainerConfig, abstract_train_state,
@@ -45,6 +47,9 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh spec: 'data=N,model=M' or 'auto' "
+                         "(overrides --mesh-data/--mesh-model)")
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--step-deadline-s", type=float, default=None)
@@ -76,9 +81,13 @@ def main() -> None:
                                     global_batch=args.batch))
 
     mesh = rules = None
-    if args.mesh_data * args.mesh_model > 1:
+    if args.mesh:
+        mesh = build_mesh(args.mesh)
+    elif args.mesh_data * args.mesh_model > 1:
         mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
+    if mesh is not None:
         rules = sh.rules_for_mesh(mesh)
+        print(f"[mesh] {describe_mesh(mesh)} rules={rules}")
 
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     tcfg = TrainerConfig(total_steps=args.steps, log_every=10,

@@ -20,8 +20,19 @@ class Model:
     cfg: ModelConfig
     template: Any                          # ParamSpec pytree
 
-    def init(self, key: jax.Array):
-        return init_params(self.template, key, default_dtype=self.cfg.dtype)
+    def init(self, key: jax.Array, mesh=None, rules=None):
+        """Random params; with ``mesh`` (+ optional ``rules``) every leaf is
+        placed by the sharding rules — same values, sharded layout."""
+        shardings = None
+        if mesh is None:
+            from repro.distributed import ctx
+            mesh, rules = ctx.current_mesh(), rules or ctx.current_rules()
+        if mesh is not None:
+            from repro.distributed import sharding as sh
+            rules = rules or sh.rules_for_mesh(mesh)
+            shardings = sh.param_shardings(mesh, rules, self.template)
+        return init_params(self.template, key, default_dtype=self.cfg.dtype,
+                           shardings=shardings)
 
     def abstract(self):
         return abstract_params(self.template, default_dtype=self.cfg.dtype)

@@ -43,8 +43,16 @@ def _path_str(path) -> str:
     return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
-def init_params(template, key: jax.Array, default_dtype: str = "float32"):
-    """Materialize random parameters from a template pytree."""
+def init_params(template, key: jax.Array, default_dtype: str = "float32",
+                shardings=None):
+    """Materialize random parameters from a template pytree.
+
+    ``shardings`` (a pytree of ``NamedSharding`` aligned with the template,
+    e.g. from ``distributed.sharding.param_shardings``) places every leaf on
+    its mesh shards — values are bit-identical to the unsharded init, only
+    the layout differs, which is what keeps 1-device vs N-device runs
+    token-for-token comparable.
+    """
     def init_leaf(path, spec: ParamSpec):
         dtype = jnp.dtype(spec.dtype or default_dtype)
         if spec.init == "zeros":
@@ -56,7 +64,11 @@ def init_params(template, key: jax.Array, default_dtype: str = "float32"):
         k = _leaf_key(key, _path_str(path))
         return (scale * jax.random.normal(k, spec.shape, jnp.float32)).astype(dtype)
 
-    return jax.tree_util.tree_map_with_path(init_leaf, template, is_leaf=is_spec)
+    params = jax.tree_util.tree_map_with_path(init_leaf, template,
+                                              is_leaf=is_spec)
+    if shardings is not None:
+        params = jax.device_put(params, shardings)
+    return params
 
 
 def abstract_params(template, default_dtype: str = "float32"):

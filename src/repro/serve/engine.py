@@ -20,16 +20,24 @@ Production-shaped serving over a fixed pool of ``max_batch`` KV-cache slots:
 * **Tuned tiles** — the decode step's GEMM shapes are traced once and
   resolved against the global tile registry; the lookup provenance
   (exact/nearest/generic/default) is surfaced in :meth:`Engine.stats`.
+* **Meshes** — ``ServeConfig(mesh="data=4,model=2")`` (or an ambient
+  ``distributed.ctx.use_mesh``) shards params, KV-cache slots and the batch
+  by the ``ShardingRules`` of the mesh — the distribution layer's analogue
+  of the paper's tuning table: the same engine source serves one chip or a
+  pod, selected by a spec string.  Tuned-tile lookups are then keyed on the
+  per-shard *local* GEMM shapes (TP changes which tuned entry is hit), and
+  :meth:`Engine.stats` reports mesh/sharding provenance.
 
-Prompt lengths are bucketed to powers of two (min 8) so a wave and a lone
-prompt in the same bucket share one compiled prefill *and* take bit-identical
-float paths — the basis of the ragged-batch parity guarantee.
+Prompt lengths are bucketed to powers of two (min 8, clamped so the bucket
+plus the wave's decode budget never exceeds ``max_len``) so a wave and a
+lone prompt in the same bucket share one compiled prefill *and* take
+bit-identical float paths — the basis of the ragged-batch parity guarantee.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,10 +48,19 @@ from repro.models.model import Model
 _PLEN_BUCKET_MIN = 8
 
 
-def _bucket_len(n: int) -> int:
+def _bucket_len(n: int, cap: Optional[int] = None) -> int:
+    """Smallest power-of-two bucket >= ``n``, clamped to ``cap``.
+
+    The clamp keeps near-capacity buckets inside the KV-slot capacity
+    instead of overshooting ``max_len`` and forcing callers back to exact
+    (per-length-recompiling) sizes.  When ``cap < n`` the cap itself is
+    returned (< n) and the caller must fall back to exact sizing.
+    """
     b = _PLEN_BUCKET_MIN
     while b < n:
         b *= 2
+    if cap is not None and b > cap:
+        b = cap
     return b
 
 
@@ -59,6 +76,10 @@ class ServeConfig:
     # the ambient execution context's resolution: explicit override >
     # $REPRO_HARDWARE > jax.devices() detection.
     hardware: Optional[str] = None
+    # Device mesh: a spec string ("data=4,model=2" | "auto"), a prebuilt
+    # jax.sharding.Mesh, or None.  None picks up the ambient
+    # distributed.ctx.use_mesh() topology (single-device when absent).
+    mesh: Optional[Union[str, jax.sharding.Mesh]] = None
 
 
 @dataclasses.dataclass
@@ -119,7 +140,25 @@ class Engine:
                          else current_hardware())
         prof = find_profile(self.hardware)
         self._platform = prof.platform if prof else "unknown"
-        self._prefill = jax.jit(model.prefill)
+        # Mesh topology: explicit config > ambient use_mesh() > single-device.
+        # Resolved once, like the hardware profile — one engine, one mesh.
+        from repro.distributed import ctx as dctx
+        mesh, rules = cfg.mesh, None
+        if mesh is None:
+            mesh, rules = dctx.current_mesh(), dctx.current_rules()
+        if isinstance(mesh, str):
+            from repro.launch.mesh import build_mesh
+            mesh = build_mesh(mesh)
+        self.mesh = mesh
+        self.rules = None
+        if mesh is not None:
+            from repro.distributed import sharding as sh
+            self.rules = rules or sh.rules_for_mesh(mesh)
+            # Re-place params by the rules (no-op layout change on values:
+            # sharded and single-device engines stay token-for-token equal).
+            self.params = sh.shard_params(params, mesh, self.rules,
+                                          model.template)
+        self._prefill = jax.jit(self._with_mesh(model.prefill))
         self._loop = None                 # built lazily (per-engine closure)
         self._cache = None                # allocated once, reused across calls
         self._sched = _SlotScheduler(cfg.max_batch)
@@ -127,12 +166,38 @@ class Engine:
         self._next_rid = 0
         self._tile_lookups: Optional[Dict[str, Dict[str, object]]] = None
         self._prefill_flash_lookups: Dict[str, Dict[str, object]] = {}
+        self._plen_buckets: set = set()
         self._stats: Dict[str, float] = {
             "requests": 0, "tokens_generated": 0, "generate_calls": 0,
             "waves": 0, "device_transfers": 0, "cache_allocs": 0,
             "prefill_seconds": 0.0, "decode_seconds": 0.0,
             "total_seconds": 0.0,
         }
+
+    # -- mesh plumbing --------------------------------------------------
+    def _with_mesh(self, fn):
+        """Wrap ``fn`` so tracing happens under this engine's activation
+        policy (``constrain`` pins residual/logits layouts to the mesh).
+        Identity when the engine is single-device."""
+        if self.mesh is None:
+            return fn
+        mesh, rules = self.mesh, self.rules
+
+        def wrapped(*args, **kwargs):
+            from repro.distributed.ctx import activation_policy
+            with activation_policy(mesh, rules):
+                return fn(*args, **kwargs)
+
+        return wrapped
+
+    def _place_batch(self, tree):
+        """Shard leading-batch-dim arrays over the data axes (no-op
+        single-device).  Values are unchanged — only the layout."""
+        if self.mesh is None:
+            return tree
+        from repro.distributed import sharding as sh
+        return jax.device_put(
+            tree, sh.batch_shardings(self.mesh, self.rules, tree))
 
     # -- sampling ------------------------------------------------------
     def _sample(self, logits: jax.Array, key) -> jax.Array:
@@ -190,20 +255,34 @@ class Engine:
                 cond, body, carry)
             return buf, lens, cache
 
-        return jax.jit(loop, static_argnames=("width",))
+        return jax.jit(self._with_mesh(loop), static_argnames=("width",))
 
     # -- slot-pool cache -----------------------------------------------
     def _ensure_cache(self):
         if self._cache is None:
-            self._cache = self.model.init_cache(self.cfg.max_batch,
-                                                self.cfg.max_len)
+            cache = self.model.init_cache(self.cfg.max_batch,
+                                          self.cfg.max_len)
+            if self.mesh is not None:
+                # Shard the slot pool itself: batch over the data axes,
+                # heads (or cache sequence, for GQA) over the tensor axis.
+                from repro.distributed import sharding as sh
+                cache = jax.device_put(
+                    cache, sh.cache_shardings(self.mesh, self.rules, cache))
+            self._cache = cache
             self._stats["cache_allocs"] += 1
             self._trace_decode_tiles()
         return self._cache
 
     def _trace_decode_tiles(self) -> None:
         """Abstractly trace one decode step, resolve its GEMM shapes against
-        the tuned-tile registry, and record the lookup provenance."""
+        the tuned-tile registry, and record the lookup provenance.
+
+        On a mesh the traced shapes are *global*; what each shard actually
+        runs is the local GEMM — batch split over the data axes, weight dims
+        split per the sharding rules — so the registry lookup is keyed on
+        the local shape (TP therefore changes which tuned entry is hit).
+        Both shapes are recorded in the provenance.
+        """
         from repro.core import capture_gemm_shapes
         from repro.core.registry import GLOBAL_REGISTRY
         b = self.cfg.max_batch
@@ -217,16 +296,33 @@ class Engine:
         except Exception:      # provenance is telemetry, never fatal
             self._tile_lookups = {}
             return
+        weight_div, batch_div = {}, 1
+        if self.mesh is not None:
+            from repro.distributed import sharding as sh
+            weight_div = sh.local_gemm_divisors(self.mesh, self.rules,
+                                                self.model.template)
+            batch_div = sh.axis_size(self.mesh, self.rules.batch_axes)
         hw = self.hardware
         dtype = self.model.cfg.dtype
         lookups = {}
         for (m, k, n) in sorted(set(shapes)):
-            res = GLOBAL_REGISTRY.lookup(hw, dtype, m, k, n)
-            lookups[f"{m}x{k}x{n}"] = {
-                "source": res.source,
-                "tile": res.config.label,
-                "matched_shape": res.matched_shape,
-            }
+            # distinct weights can shard one global (K, N) differently
+            # (e.g. square wq vs wo); record a lookup per local variant
+            for dk, dn in weight_div.get((k, n), ((1, 1),)):
+                lm = m // batch_div if m % batch_div == 0 else m
+                lk, ln = k // dk, n // dn
+                res = GLOBAL_REGISTRY.lookup(hw, dtype, lm, lk, ln)
+                entry = {
+                    "source": res.source,
+                    "tile": res.config.label,
+                    "matched_shape": res.matched_shape,
+                }
+                key = f"{m}x{k}x{n}"
+                if self.mesh is not None:
+                    entry["local_shape"] = f"{lm}x{lk}x{ln}"
+                    if len(weight_div.get((k, n), ())) > 1:
+                        key = f"{m}x{k}x{n}->{lm}x{lk}x{ln}"
+                lookups[key] = entry
         self._tile_lookups = lookups
 
     def _record_prefill_flash_tiles(self, plen: int) -> None:
@@ -278,6 +374,12 @@ class Engine:
             raise ValueError("empty prompt: each prompt needs >= 1 token")
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        # Per-request capacity check at enqueue time: an oversized request
+        # fails fast HERE instead of bricking the wave it lands in later.
+        if len(prompt) + max_new_tokens > self.cfg.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) exceeds "
+                f"max_len ({self.cfg.max_len})")
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(_Request(rid, prompt, int(max_new_tokens), row))
@@ -291,7 +393,11 @@ class Engine:
         Requests are served in waves of up to ``max_batch`` KV-cache slots;
         each wave is one prefill plus one fused device-resident decode loop
         (a single host transfer).  Ragged prompt lengths within a wave are
-        handled by left-padding + ``kv_start`` masking.
+        handled by left-padding + ``kv_start`` masking.  Waves are *packed
+        by capacity*: a wave's KV need is ``max(prompt) + max(max_new)``
+        over its members, so a long-prompt/small-budget request and a
+        short-prompt/big-budget request that each fit on their own are
+        scheduled into separate waves instead of being rejected together.
 
         Args:
           extra_inputs: optional per-request model inputs (e.g. Whisper
@@ -311,14 +417,36 @@ class Engine:
         # profile the engine reports in stats().
         with execution_context(hardware=self.hardware):
             while self._queue:
-                wave = [self._queue.pop(0)
-                        for _ in range(min(len(self._queue),
-                                           self.cfg.max_batch))]
+                wave = self._pack_wave()
                 key, wave_key = jax.random.split(key)
                 self._run_wave(wave, extra_inputs, wave_key)
                 for r in wave:
                     results[r.rid] = r.tokens
         return results
+
+    def _pack_wave(self) -> List[_Request]:
+        """Pop the next capacity-feasible wave off the queue (FIFO-biased).
+
+        The head request always ships (submit() guaranteed it fits alone);
+        later requests join only while the *joint* requirement
+        ``max(prompt) + max(max_new)`` stays within ``max_len`` — requests
+        that don't fit keep their queue position for a later wave, so mixed
+        long-prompt/long-budget traffic never over-rejects.
+        """
+        wave = [self._queue.pop(0)]
+        longest = len(wave[0].prompt)
+        need = wave[0].max_new
+        i = 0
+        while len(wave) < self.cfg.max_batch and i < len(self._queue):
+            r = self._queue[i]
+            nl = max(longest, len(r.prompt))
+            nn = max(need, r.max_new)
+            if nl + nn <= self.cfg.max_len:
+                wave.append(self._queue.pop(i))
+                longest, need = nl, nn
+            else:
+                i += 1
+        return wave
 
     # -- batched generation ---------------------------------------------
     def generate(self, prompts: List[List[int]], max_new_tokens: int,
@@ -333,6 +461,11 @@ class Engine:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if any(not list(p) for p in prompts):
             raise ValueError("empty prompt: each prompt needs >= 1 token")
+        for p in prompts:
+            if len(list(p)) + max_new_tokens > self.cfg.max_len:
+                raise ValueError(
+                    f"prompt ({len(list(p))}) + max_new ({max_new_tokens}) "
+                    f"exceeds max_len ({self.cfg.max_len})")
         if extra_inputs:
             for name, arr in extra_inputs.items():
                 if arr.shape[0] != len(prompts):
@@ -362,16 +495,26 @@ class Engine:
         b = cfg.max_batch
         # Validate BEFORE admitting: a rejected request must not leak slots.
         need = max(r.max_new for r in wave)    # real token budget (cache need)
-        width = _bucket_len(need)              # loop bound/buffer, bucketed so
-        #                                        varied max_new shares a compile
         longest = max(len(r.prompt) for r in wave)
-        plen = _bucket_len(longest)
-        if plen + need > cfg.max_len:
-            plen = longest                     # drop the bucket, not the user
-        if plen + need > cfg.max_len:
-            raise ValueError(
-                f"prompt ({longest}) + max_new ({need}) exceeds "
+        if longest + need > cfg.max_len:       # submit()/_pack_wave guarantee
+            raise ValueError(                  # this; keep the guard for raw
+                f"prompt ({longest}) + max_new ({need}) exceeds "   # callers
                 f"max_len ({cfg.max_len})")
+        # The decode width is a pure buffer/loop bound (the fused loop stops
+        # at each slot's budget and cache writes stay within plen + need),
+        # so it keeps its power-of-two bucket unclamped — one compile per
+        # need bucket.  The prompt pad length IS capacity-bound: bucket it,
+        # clamped so near-capacity prompts share one clamped bucket instead
+        # of falling back to exact per-length sizes (a recompile per
+        # distinct prompt length).  The cap prefers the width bucket (fewer
+        # distinct plens) and degrades to the exact need only when the
+        # bucket would push below the prompt itself.
+        width = _bucket_len(need)
+        plen = _bucket_len(longest, cfg.max_len - width)
+        if plen < longest:
+            plen = _bucket_len(longest, cfg.max_len - need)
+        if plen < longest:     # unreachable: longest + need <= max_len
+            plen = longest
         if extra_inputs and any(r.row is None for r in wave):
             raise ValueError(
                 "extra_inputs needs every request submitted with row= "
@@ -408,9 +551,14 @@ class Engine:
                 padded = jnp.zeros((b,) + arr.shape[1:], arr.dtype)
                 batch[name] = padded.at[jnp.asarray(slots)].set(
                     jnp.asarray(arr)[jnp.asarray(rows)])
+        # Split the wave over the data axes (identity without a mesh).
+        batch = self._place_batch(batch)
+        kv_start_d, budget_d = self._place_batch(
+            (jnp.asarray(kv_start), jnp.asarray(budget)))
 
         cache = self._ensure_cache()
         self._record_prefill_flash_tiles(plen)
+        self._plen_buckets.add(int(plen))
         t0 = time.perf_counter()
         logits0, cache = self._prefill(self.params, batch, cache)
         if cfg.profile:
@@ -420,8 +568,8 @@ class Engine:
         if self._loop is None:
             self._loop = self._build_loop()
         buf, lens, cache = self._loop(
-            self.params, cache, logits0, key, jnp.asarray(kv_start),
-            jnp.asarray(budget), jnp.int32(plen), width=width)
+            self.params, cache, logits0, key, kv_start_d,
+            budget_d, jnp.int32(plen), width=width)
         self._cache = cache
 
         # The ONE host transfer of this wave (== of the whole generate call
@@ -448,6 +596,10 @@ class Engine:
         * ``hardware`` / ``hardware_platform`` — the resolved hardware
           profile every tile lookup below was keyed by (provenance for
           bench artifacts and the CI backend matrix);
+        * ``mesh`` / ``sharding`` — the device topology (axis name → size)
+          and, on a mesh, the active sharding rules plus a histogram of the
+          param partition specs they produced (``sharding`` is ``None``
+          single-device);
         * ``decode_tile_lookups`` — each decode-step GEMM shape mapped to
           its resolved tile and provenance tier
           (``exact``/``nearest``/``generic``/``default``/``fallback``);
@@ -464,9 +616,26 @@ class Engine:
             # {'8x8x64': {'source': 'nearest', 'tile': '128x128', ...}}
         """
         from repro.core.registry import GLOBAL_REGISTRY
+        from repro.launch.mesh import describe_mesh
         out = dict(self._stats)
         out["hardware"] = self.hardware
         out["hardware_platform"] = self._platform
+        out["mesh"] = describe_mesh(self.mesh)
+        if self.mesh is None:
+            out["sharding"] = None
+        else:
+            from repro.distributed import sharding as sh
+            out["sharding"] = {
+                "rules": {
+                    "tensor_axis": self.rules.tensor_axis,
+                    "fsdp_axis": self.rules.fsdp_axis,
+                    "batch_axes": list(self.rules.batch_axes),
+                    "sequence_axis": self.rules.sequence_axis,
+                },
+                "params": sh.sharding_summary(self.mesh, self.rules,
+                                              self.model.template),
+            }
+        out["prefill_plen_buckets"] = sorted(self._plen_buckets)
         out["slots"] = self.cfg.max_batch
         out["slots_admitted"] = self._sched.admitted
         out["slots_evicted"] = self._sched.evicted

@@ -1,0 +1,252 @@
+"""Mesh-sharded serving: spec parsing, topology plumbing, and the tentpole
+token-for-token parity guarantee (1-device engine == data=4,model=2 mesh).
+
+The parity tests need 8 devices; in-process versions run when the session
+already exposes them (the CI multi-device leg sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and a slow
+subprocess version forces them for single-device sessions (full tier).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.mesh import MESH_AXES, build_mesh, describe_mesh, parse_mesh_spec
+
+# one representative per model family (dense / ssm / moe / vlm / audio)
+FAMILIES = ["llama3.2-1b", "mamba2-130m", "olmoe-1b-7b",
+            "llama-3.2-vision-11b", "whisper-large-v3"]
+
+PROMPTS = [[5, 9, 2, 7], [1, 3, 3], [2, 4, 6, 8, 1, 5, 3], [9, 9, 1],
+           [4, 4], [7, 1, 2, 3, 4], [8, 8, 8], [1, 2]]
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing / mesh construction (no multi-device requirement)
+# ---------------------------------------------------------------------------
+
+def test_parse_mesh_spec():
+    assert parse_mesh_spec("data=4,model=2") == {"data": 4, "model": 2}
+    assert list(parse_mesh_spec("model=2,data=4")) == ["model", "data"]
+    assert parse_mesh_spec("pod=2, data=2 , model=1") == {
+        "pod": 2, "data": 2, "model": 1}
+
+
+@pytest.mark.parametrize("bad", [
+    "", "data", "data=4,data=2", "ring=4", "data=x", "data=0", "data=-1",
+])
+def test_parse_mesh_spec_rejects(bad):
+    with pytest.raises(ValueError, match="mesh spec"):
+        parse_mesh_spec(bad)
+
+
+def test_build_mesh_none_and_trivial():
+    assert build_mesh(None) is None
+    assert build_mesh("") is None
+    mesh = build_mesh("data=1,model=1")
+    assert mesh.axis_names == ("data", "model")
+    assert describe_mesh(mesh) == {"devices": 1,
+                                   "axes": {"data": 1, "model": 1}}
+    assert describe_mesh(None) == {"devices": 1, "axes": None}
+
+
+def test_build_mesh_auto_uses_all_devices():
+    mesh = build_mesh("auto")
+    assert mesh.axis_names == ("data",)
+    assert mesh.size == len(jax.devices())
+
+
+def test_build_mesh_too_many_devices_is_actionable():
+    n = len(jax.devices()) * 2
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        build_mesh(f"data={n}")
+
+
+def test_mesh_axes_vocabulary_matches_rules():
+    """The spec axes the parser admits are exactly the names the sharding
+    rules know how to map."""
+    from repro.distributed.sharding import ShardingRules
+    rules = ShardingRules()
+    known = {rules.tensor_axis, rules.fsdp_axis, *rules.batch_axes, "pod"}
+    assert set(MESH_AXES) <= known
+
+
+# ---------------------------------------------------------------------------
+# In-process mesh engine tests (run under the CI multi-device leg)
+# ---------------------------------------------------------------------------
+
+needs_8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _build(arch, mesh=None):
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+    cfg = ARCHITECTURES[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=8, max_len=64, mesh=mesh))
+    prompts = [[t % cfg.vocab_size for t in p] for p in PROMPTS]
+    extra = {k: jnp.zeros((len(prompts),) + s.shape[1:], s.dtype)
+             for k, s in model.extra_inputs(len(prompts)).items()}
+    return model, params, eng, prompts, (extra or None)
+
+
+@needs_8
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_mesh_parity_all_families(arch):
+    """Tentpole acceptance: a data=4,model=2 mesh serves token-for-token
+    what the single-device engine serves — sharding is a pure layout knob."""
+    _, _, base, prompts, extra = _build(arch)
+    _, _, meshed, _, _ = _build(arch, mesh="data=4,model=2")
+    out_base = base.generate(prompts, 5, extra_inputs=extra)
+    out_mesh = meshed.generate(prompts, 5, extra_inputs=extra)
+    assert out_mesh == out_base, arch
+
+
+@needs_8
+def test_mesh_stats_provenance():
+    _, _, eng, prompts, _ = _build("llama3.2-1b", mesh="data=4,model=2")
+    eng.generate(prompts[:2], 3)
+    st = eng.stats()
+    assert st["mesh"] == {"devices": 8, "axes": {"data": 4, "model": 2}}
+    assert st["sharding"]["rules"]["tensor_axis"] == "model"
+    assert st["sharding"]["rules"]["fsdp_axis"] == "data"
+    assert sum(st["sharding"]["params"].values()) > 0
+    # some param leaves actually landed on the model axis
+    assert any("'model'" in k for k in st["sharding"]["params"])
+
+
+@needs_8
+def test_mesh_local_shape_tile_lookups():
+    """Tuned-tile lookups on a mesh are keyed by the per-shard LOCAL GEMM
+    shape — TP/FSDP change which tuned entry is hit."""
+    _, _, eng, prompts, _ = _build("llama3.2-1b", mesh="data=4,model=2")
+    eng.generate(prompts[:8], 3)
+    lookups = eng.stats()["decode_tile_lookups"]
+    assert lookups
+    shrunk = 0
+    for key, info in lookups.items():
+        global_shape = key.split("->")[0]
+        m, k, n = (int(x) for x in global_shape.split("x"))
+        lm, lk, ln = (int(x) for x in info["local_shape"].split("x"))
+        assert lm <= m and lk <= k and ln <= n
+        shrunk += (lm, lk, ln) != (m, k, n)
+    assert shrunk > 0, f"no lookup used a local shape: {lookups}"
+    # square attention projections (wq: embed->ff vs wo: ff->embed) shard
+    # the same global (K, N) both ways — both variants must be reported
+    variant_keys = [key for key in lookups if "->" in key]
+    assert len(variant_keys) >= 2, lookups
+    # single-device engines don't report local shapes
+    _, _, base, _, _ = _build("llama3.2-1b")
+    base.generate(prompts[:2], 3)
+    assert all("local_shape" not in v
+               for v in base.stats()["decode_tile_lookups"].values())
+
+
+@needs_8
+def test_ambient_use_mesh_is_picked_up():
+    """distributed.ctx.use_mesh installs the topology for engines (and
+    Model.init) that are not handed a mesh explicitly."""
+    from repro.distributed import use_mesh
+    mesh = build_mesh("data=4,model=2")
+    with use_mesh(mesh):
+        _, _, eng, prompts, _ = _build("llama3.2-1b")
+        assert eng.mesh is mesh
+        out = eng.generate(prompts[:4], 3)
+    _, _, base, _, _ = _build("llama3.2-1b")
+    assert base.mesh is None
+    assert base.generate(prompts[:4], 3) == out
+
+
+@needs_8
+def test_use_mesh_none_clears_ambient_topology():
+    """use_mesh(None) inside an outer mesh scope restores single-device
+    behavior — the way a parity check builds its unsharded reference."""
+    from repro.distributed import current_mesh, use_mesh
+    mesh = build_mesh("data=4,model=2")
+    with use_mesh(mesh):
+        assert current_mesh() is mesh
+        with use_mesh(None):
+            assert current_mesh() is None
+            _, _, eng, _, _ = _build("llama3.2-1b")
+            assert eng.mesh is None
+        assert current_mesh() is mesh
+
+
+@needs_8
+def test_sharded_init_matches_unsharded_values():
+    """Model.init(mesh=...) changes the layout, never the values."""
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.distributed import sharding as sh
+    from repro.models import build_model
+    cfg = ARCHITECTURES["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    mesh = build_mesh("data=4,model=2")
+    plain = model.init(jax.random.PRNGKey(7))
+    sharded = model.init(jax.random.PRNGKey(7), mesh=mesh)
+    jax.tree_util.tree_map(
+        lambda a, b: None if (a == b).all() else pytest.fail("values drifted"),
+        plain, sharded)
+    # and at least one leaf is genuinely partitioned across devices
+    leaves = jax.tree_util.tree_leaves(sharded)
+    assert any(not l.sharding.is_fully_replicated for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess variant for single-device sessions (full tier)
+# ---------------------------------------------------------------------------
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+
+    PROMPTS = {prompts!r}
+    cfg = ARCHITECTURES[{arch!r}].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = [[t % cfg.vocab_size for t in p] for p in PROMPTS]
+    extra = {{k: jnp.zeros((len(prompts),) + s.shape[1:], s.dtype)
+              for k, s in model.extra_inputs(len(prompts)).items()}} or None
+    base = Engine(model, params, ServeConfig(max_batch=8, max_len=64))
+    out1 = base.generate(prompts, 5, extra_inputs=extra)
+    meshed = Engine(model, params,
+                    ServeConfig(max_batch=8, max_len=64, mesh="data=4,model=2"))
+    out2 = meshed.generate(prompts, 5, extra_inputs=extra)
+    st = meshed.stats()
+    print("RESULT " + json.dumps({{
+        "parity": out1 == out2,
+        "devices": st["mesh"]["devices"],
+        "axes": st["mesh"]["axes"]}}))
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_mesh_parity_subprocess(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROC.format(arch=arch, prompts=PROMPTS)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    rec = json.loads(line[len("RESULT "):])
+    assert rec["parity"], arch
+    assert rec["devices"] == 8
+    assert rec["axes"] == {"data": 4, "model": 2}

@@ -293,6 +293,28 @@ def test_bench_compare_fails_on_missing_family(tmp_path):
     assert "missing from fresh run" in proc.stdout
 
 
+def test_bench_compare_zero_baseline_warns_instead_of_silently_passing(tmp_path):
+    """Satellite bugfix: a 0.0 baseline used to skip the comparison without
+    a word.  It must now warn explicitly (and stay neutral — a zero cannot
+    anchor a relative gate)."""
+    base = [("serving/llama3.2-1b/prefill_tok_s/B8xP16", 10.0, 0.0)]
+    fresh = [("serving/llama3.2-1b/prefill_tok_s/B8xP16", 10.0, 0.0)]
+    proc = _run_compare(tmp_path, fresh, base)
+    assert proc.returncode == 0, proc.stdout
+    assert "warn" in proc.stdout and "zero baseline" in proc.stdout
+
+
+def test_bench_compare_fails_when_nonzero_family_drops_to_zero(tmp_path):
+    """A previously-nonzero family reporting 0.0 is a dead metric — fail
+    regardless of how loose the family's tolerance is."""
+    base = [("serving/llama3.2-1b/prefill_tok_s/B8xP16", 10.0, 100.0)]
+    fresh = [("serving/llama3.2-1b/prefill_tok_s/B8xP16", 10.0, 0.0)]
+    proc = _run_compare(tmp_path, fresh, base,
+                        tolerances={"serving/": 0.99})
+    assert proc.returncode == 1, proc.stdout
+    assert "went dead" in proc.stdout
+
+
 def test_committed_bench_baselines_exist():
     bdir = os.path.join(REPO, "benchmarks", "baselines")
     for suite in ("gemm_tuning", "attention_tuning", "serving"):

@@ -179,6 +179,64 @@ def test_overlong_request_raises_without_leaking_slots():
     assert len(outs[0]) == 3
 
 
+def test_mixed_wave_capacity_no_over_rejection():
+    """Headline bugfix: the engine used to reject a wave when
+    max(prompt) + max(max_new) ACROSS the wave exceeded max_len, even though
+    each request fit on its own.  Wave packing must schedule a
+    long-prompt/small-budget and a short-prompt/big-budget request into
+    separate waves and complete both."""
+    cfg, model, params, eng = _build(max_batch=2, max_len=16)
+    rid_a = eng.submit([1] * 12, 3)     # 12 + 3  = 15 <= 16: fits alone
+    rid_b = eng.submit([2, 3], 12)      # 2  + 12 = 14 <= 16: fits alone
+    results = eng.run()                 # used to raise: 12 + 12 > 16
+    assert len(results[rid_a]) == 3
+    assert len(results[rid_b]) == 12
+    assert eng.stats()["waves"] == 2    # packed apart, not rejected together
+    # each request decodes exactly what it decodes alone
+    assert results[rid_a] == eng.generate([[1] * 12], 3)[0]
+    assert results[rid_b] == eng.generate([[2, 3]], 12)[0]
+
+
+def test_wave_packing_keeps_compatible_requests_batched():
+    """Packing must not needlessly split: requests that fit jointly still
+    share one wave (one prefill + one fused decode)."""
+    cfg, model, params, eng = _build(max_batch=3, max_len=64)
+    for p in RAGGED:
+        eng.submit(p, 5)
+    results = eng.run()
+    assert eng.stats()["waves"] == 1
+    assert len(results) == 3
+
+
+def test_submit_rejects_oversized_request_fast():
+    """Per-request validation at enqueue time: an oversized request fails at
+    submit() instead of bricking the wave it would have joined."""
+    cfg, model, params, eng = _build(max_len=16)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit([1] * 12, 8)         # 12 + 8 > 16
+    assert eng.stats()["requests"] == 0
+    # the queue is untouched: a valid request still round-trips
+    rid = eng.submit([1, 2], 3)
+    assert len(eng.run()[rid]) == 3
+
+
+def test_near_capacity_bucket_clamped_to_max_len():
+    """Satellite bugfix: _bucket_len used to overshoot max_len for
+    near-capacity prompts, falling back to exact per-length pad sizes (a
+    recompile per distinct prompt length).  The clamped bucket keeps nearby
+    long prompts in ONE bucket — and stays token-for-token exact."""
+    from repro.serve import generate_per_prompt
+    cfg, model, params, eng = _build(max_len=48)
+    for plen in (38, 40):
+        prompt = [(i * 7 + 3) % cfg.vocab_size for i in range(plen)]
+        out = eng.generate([prompt], 4)[0]
+        assert out == generate_per_prompt(model, params, [prompt], 4,
+                                          max_len=48)[0]
+    buckets = eng.stats()["prefill_plen_buckets"]
+    assert len(buckets) == 1, buckets   # 38 and 40 share one clamped bucket
+    assert buckets[0] + 4 <= 48         # and it honours the slot capacity
+
+
 def test_submit_run_queue_api():
     cfg, model, params, eng = _build(max_batch=2)
     rids = [eng.submit(p, 4) for p in RAGGED]

@@ -46,6 +46,89 @@ def test_param_spec_rules_small_mesh():
     assert tuple(sp) == (None, "data", "model")
 
 
+class _FakeMesh:
+    def __init__(self, **shape):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+
+
+def test_rules_for_mesh_axis_presence():
+    """rules_for_mesh degrades gracefully with whatever axes the mesh has."""
+    from repro.distributed.sharding import rules_for_mesh
+
+    r = rules_for_mesh(_FakeMesh(data=4, model=2))
+    assert (r.tensor_axis, r.fsdp_axis, r.batch_axes) == ("model", "data",
+                                                          ("data",))
+    assert r.sequence_axis is None
+    # data-only mesh: no tensor axis to map TP onto
+    r = rules_for_mesh(_FakeMesh(data=8))
+    assert r.tensor_axis is None and r.fsdp_axis == "data"
+    # model-only mesh: batch falls back to the first axis
+    r = rules_for_mesh(_FakeMesh(model=8))
+    assert r.tensor_axis == "model" and r.fsdp_axis is None
+    assert r.batch_axes == ("model",)
+    # multi-pod: batch spans the pod AND data axes, in that order
+    r = rules_for_mesh(_FakeMesh(pod=2, data=4, model=2))
+    assert r.batch_axes == ("pod", "data")
+    # knobs: FSDP off, sequence parallelism on
+    r = rules_for_mesh(_FakeMesh(data=4, model=2), fsdp=False,
+                       sequence_parallel=True)
+    assert r.fsdp_axis is None and r.sequence_axis == "model"
+    # sequence parallelism needs a model axis to land on
+    r = rules_for_mesh(_FakeMesh(data=8), sequence_parallel=True)
+    assert r.sequence_axis is None
+
+
+def test_rules_for_mesh_spec_edge_cases():
+    """Edge cases threaded end-to-end through rules_for_mesh -> specs:
+    non-divisible dims replicate, 1-D params replicate, and a mesh axis is
+    used at most once per spec."""
+    from repro.distributed.sharding import rules_for_mesh, spec_for_param
+
+    mesh = _FakeMesh(data=4, model=2)
+    rules = rules_for_mesh(mesh)
+    # dims not divisible by their target axis size fall back to replicated
+    sp = spec_for_param(mesh, rules, ParamSpec((63, 128), ("vocab", "ff")))
+    assert tuple(sp) == (None, "model")
+    sp = spec_for_param(mesh, rules, ParamSpec((64, 125), ("embed", "ff")))
+    assert tuple(sp) == ("data", None)
+    # 1-D params (norm scales, biases) always replicate
+    for axes in (("embed",), ("vocab",), (None,)):
+        assert tuple(spec_for_param(mesh, rules, ParamSpec((64,), axes))) == ()
+    # a mesh axis is used at most once per spec (first dim wins)
+    sp = spec_for_param(mesh, rules,
+                        ParamSpec((8, 64, 128), ("expert", "embed", "ff")))
+    assert tuple(sp) == ("model", "data", None)
+    sp = spec_for_param(mesh, rules, ParamSpec((128, 64), ("vocab", "ff")))
+    assert tuple(sp) == ("model", None)
+
+
+def test_local_gemm_divisors():
+    """The serve engine's local-shape lookups: weight (K, N) dims map to the
+    mesh-axis sizes their sharding spec divides them by."""
+    from repro.distributed.sharding import local_gemm_divisors, rules_for_mesh
+
+    mesh = _FakeMesh(data=4, model=2)
+    rules = rules_for_mesh(mesh)
+    template = {
+        "wq": ParamSpec((64, 128), ("embed", "ff")),       # (data, model)
+        "embed": ParamSpec((256, 64), ("vocab", "embed")),  # (model, data)
+        "stack": ParamSpec((4, 64, 128), ("layer", "embed", "ff")),
+        "norm": ParamSpec((64,), ("embed",)),               # 1-D: skipped
+        "odd": ParamSpec((63, 125), ("vocab", "embed")),    # non-divisible
+        # square projections: same global (K, N), different axis order —
+        # BOTH divisor variants must be surfaced, not first-leaf-wins
+        "sq_in": ParamSpec((64, 64), ("embed", "ff")),
+        "sq_out": ParamSpec((64, 64), ("ff", "embed")),
+    }
+    div = local_gemm_divisors(mesh, rules, template)
+    assert div[(64, 128)] == ((4, 2),)    # K split by FSDP, N by TP
+    assert div[(256, 64)] == ((2, 4),)
+    assert div[(63, 125)] == ((1, 1),)    # non-divisible -> replicated -> 1
+    assert div[(64, 64)] == ((2, 4), (4, 2))   # wq-like AND wo-like variants
+    assert (64,) not in div
+
+
 _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
