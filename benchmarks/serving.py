@@ -26,15 +26,18 @@ from repro.serve import Engine, PerTokenSyncEngine, ServeConfig
 ARCH = "llama3.2-1b"
 
 
-def _best_split(fn, repeats: int):
-    """Run ``fn`` (which returns a (prefill_s, decode_s) pair) ``repeats``
-    times; keep the pair from the repeat with the fastest decode — both
-    engines get identical best-of-N treatment."""
-    best = None
+def _best_interleaved(fns, repeats: int):
+    """Run every ``fn`` (returning a (prefill_s, decode_s) pair) once per
+    round, ``repeats`` rounds; keep each fn's pair from its fastest-decode
+    round.  Interleaving the engines round-robin (instead of timing all of
+    one then all of the other) exposes both to the same machine drift, so
+    the fused/sync ratio is a same-conditions comparison."""
+    best = [None] * len(fns)
     for _ in range(repeats):
-        pair = fn()
-        if best is None or pair[1] < best[1]:
-            best = pair
+        for i, fn in enumerate(fns):
+            pair = fn()
+            if best[i] is None or pair[1] < best[i][1]:
+                best[i] = pair
     return best
 
 
@@ -42,7 +45,19 @@ def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
     batch = 8
     plen = 16
     max_new = 16 if smoke else 48
-    repeats = 2 if smoke else 3
+    # Mesh runs take more best-of repeats: the forced-multi-device host
+    # interleaves 8 device threads on shared cores, so per-run wall-clock
+    # noise is far above the single-device case and a best-of-2 ratio can
+    # swing past the bench gate's tolerance in either direction.
+    repeats = (4 if mesh else 2) if smoke else (6 if mesh else 3)
+    # Warmup waves are SEPARATE from the measured ones: the first generate
+    # compiles prefill + the fused loop (and, on a mesh, resolves the tuned
+    # decode unroll and re-places params/cache by the sharding rules); the
+    # second exercises the slot-reuse path so every measured repeat below is
+    # a steady-state wave.  Engine construction/compile therefore never
+    # leaks into the fused/sync ratio — matching how the 1-device rows
+    # measure.
+    warmup = 2
 
     cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
@@ -53,9 +68,15 @@ def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
     eng = Engine(model, params,
                  ServeConfig(max_batch=batch, max_len=256, profile=True,
                              hardware=hardware, mesh=mesh))
-    sync_eng = PerTokenSyncEngine(model, params, max_len=256, profile=True)
-    eng.generate(prompts, max_new)                       # compile both paths
-    sync_eng.generate(prompts, max_new)
+    # The sync baseline runs on the SAME topology as the fused engine, so
+    # the headline ratio isolates the execution model (per-token host syncs
+    # vs one device-resident loop) at fixed placement.  Off-mesh, mesh=None
+    # keeps it the plain single-device seed loop.
+    sync_eng = PerTokenSyncEngine(model, params, max_len=256, profile=True,
+                                  mesh=mesh)
+    for _ in range(warmup):
+        eng.generate(prompts, max_new)
+        sync_eng.generate(prompts, max_new)
 
     # Both engines split prefill/decode wall time the same way (block after
     # prefill dispatch), so the headline ratio compares decode to decode.
@@ -70,8 +91,9 @@ def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
         sync_eng.generate(prompts, max_new)
         return sync_eng.last_prefill_s, sync_eng.last_decode_s
 
-    fused_prefill_s, fused_decode_s = _best_split(fused, repeats)
-    sync_prefill_s, sync_decode_s = _best_split(sync, repeats)
+    ((fused_prefill_s, fused_decode_s),
+     (sync_prefill_s, sync_decode_s)) = _best_interleaved((fused, sync),
+                                                          repeats)
 
     new_toks = batch * max_new
     fused_tok_s = new_toks / max(fused_decode_s, 1e-9)
@@ -84,8 +106,7 @@ def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
     sources = sorted({v["source"] for v in lookups.values()}) or ["none"]
 
     mesh_info = stats["mesh"]
-    mesh_label = ("x".join(f"{a}{s}" for a, s in mesh_info["axes"].items())
-                  if mesh_info["axes"] else "none")
+    mesh_label = mesh_info["label"] or "none"
     return [
         # provenance rows: hardware profile + mesh topology keying the run
         (f"serving/{ARCH}/hardware/{stats['hardware']}", 0.0, 1.0),
@@ -99,6 +120,9 @@ def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
          sync_decode_s / new_toks * 1e6, sync_tok_s),
         (f"serving/{ARCH}/decode_speedup_fused_vs_sync-{speedup:.2f}x",
          0.0, speedup),
+        (f"serving/{ARCH}/decode_unroll/u{stats['decode_unroll']}/"
+         f"{stats['decode_unroll_source']}", 0.0,
+         float(stats["decode_unroll"] or 1)),
         (f"serving/{ARCH}/decode_tile_lookups/{len(lookups)}shapes/"
          f"{'+'.join(sources)}", 0.0, float(len(lookups))),
     ]

@@ -57,6 +57,7 @@ _VOLATILE = [
     (re.compile(r"/best=[^/]+"), "/best"),        # tab4 winning label
     (re.compile(r"/\d+x\d+(x\d+)?$"), "/cfg"),    # trailing tile/block label
     (re.compile(r"/\d+shapes/[^/]+$"), "/shapes"),  # lookup-provenance row
+    (re.compile(r"/u\d+/[^/]+$"), "/unroll"),       # decode_unroll/u4/heuristic
 ]
 
 
@@ -169,6 +170,40 @@ def compare(fresh_path: str, baseline_path: str, default_tol: float) -> int:
     return 0
 
 
+def require_improvement(fresh_path: str, required: list) -> int:
+    """Absolute gate: each required family's best ``derived`` must be >= 1.0.
+
+    The trend gate above is *relative* (vs the committed baseline), so a
+    regression blessed into the baseline passes forever after.  Ratio-valued
+    families (fused-vs-sync decode speedup) have an absolute meaning —
+    >= 1.0 is "the optimized path wins" — and this pins them to it: the
+    family must be present in the fresh run AND at >= 1.0, whatever the
+    baseline says.  That is how the mesh decode 0.54x regression is kept
+    from silently returning.
+    """
+    with open(fresh_path) as f:
+        fresh_fams = families(json.load(f))
+    failures = []
+    for fam in required:
+        val = fresh_fams.get(fam)
+        if val is None:
+            near = [f for f in fresh_fams if f.startswith(fam.split("/")[0])]
+            failures.append(f"{fam}: family missing from {fresh_path} "
+                            f"(present: {near or sorted(fresh_fams)[:8]})")
+        elif val < 1.0:
+            failures.append(f"{fam}: best derived {val:.4g} < 1.0 — the "
+                            "optimized path lost to its reference")
+        else:
+            print(f"[bench-compare] ok   {fam}: {val:.4g} >= 1.0 "
+                  "(required improvement holds)")
+    if failures:
+        print(f"[bench-compare] REQUIRED IMPROVEMENT FAILED in {fresh_path}:")
+        for msg in failures:
+            print(f"[bench-compare]   - {msg}")
+        return 1
+    return 0
+
+
 def write_baseline(fresh_path: str, baseline_path: str) -> int:
     with open(fresh_path) as f:
         fresh = json.load(f)
@@ -199,12 +234,27 @@ def main(argv=None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="bless the fresh file(s) as the new baseline "
                          "(keeps the existing tolerances map)")
+    ap.add_argument("--require-improvement", action="append", default=[],
+                    metavar="FAMILY",
+                    help="metric family (normalized name) whose best derived "
+                         "must be >= 1.0 in the fresh run — an absolute gate "
+                         "for ratio metrics, independent of the baseline; "
+                         "repeatable")
     args = ap.parse_args(argv)
 
     rc = 0
     for fresh_path in args.fresh:
         baseline_path = os.path.join(args.baseline_dir,
                                      os.path.basename(fresh_path))
+        if args.require_improvement:
+            # the absolute gate runs first — a file failing it is never
+            # blessed into the baseline either
+            req_rc = require_improvement(fresh_path, args.require_improvement)
+            rc |= req_rc
+            if req_rc and args.write_baseline:
+                print(f"[bench-compare] refusing to bless {fresh_path}: "
+                      "required improvement failed")
+                continue
         if args.write_baseline:
             rc |= write_baseline(fresh_path, baseline_path)
             continue

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Render BENCH_*.json / PROFILE_*.json artifacts as step-summary markdown.
+
+    python scripts/ci_step_summary.py BENCH_*.json PROFILE_*.json \
+        >> "$GITHUB_STEP_SUMMARY"
+
+CI appends the output of this script to ``$GITHUB_STEP_SUMMARY`` after each
+leg so the per-backend benchmark rows and the profiling breakdown are
+readable from the run page without downloading artifacts.  Missing files are
+skipped silently (a leg that failed upstream simply contributes no table)
+and a malformed file renders as a one-line note instead of failing the
+step — the summary is reporting, never a gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _bench_md(path: str, blob: dict) -> list:
+    title = os.path.basename(path)
+    mesh = blob.get("mesh")
+    sub = f" — hardware `{blob.get('hardware', '?')}`"
+    if mesh:
+        sub += f", mesh `{mesh}`"
+    lines = [f"### `{title}`{sub}", "",
+             "| metric | us/item | derived |", "| --- | ---: | ---: |"]
+    for row in blob.get("rows", []):
+        lines.append(f"| `{row['name']}` | {row.get('us_per_call', 0.0):.2f} "
+                     f"| {row.get('derived', 0.0):.4g} |")
+    return lines + [""]
+
+
+def _profile_md(path: str, blob: dict) -> list:
+    title = os.path.basename(path)
+    lines = [f"### `{title}` — kind `{blob.get('kind', '?')}`, hardware "
+             f"`{blob.get('hardware', '?')}`, mesh "
+             f"`{blob.get('mesh') or 'single'}`", "",
+             f"device-op time {blob['totals']['op_us'] / 1e3:.2f}ms over "
+             f"wall {blob['totals']['wall_us'] / 1e3:.2f}ms; "
+             f"host syncs: {blob.get('host_syncs', 0)}", "",
+             "| family | device time (ms) | share | events |",
+             "| --- | ---: | ---: | ---: |"]
+    for fam, e in blob.get("families", {}).items():
+        lines.append(f"| {fam} | {e['us'] / 1e3:.2f} "
+                     f"| {e['fraction'] * 100:.1f}% | {e['count']} |")
+    if blob.get("annotations"):
+        lines += ["", "| annotated span | wall (ms) | count |",
+                  "| --- | ---: | ---: |"]
+        for name, e in blob["annotations"].items():
+            lines.append(f"| `{name}` | {e['us'] / 1e3:.2f} | {e['count']} |")
+    roof = blob.get("roofline")
+    if roof:
+        lines += ["", f"roofline ({roof['chips']} chip(s)): compute "
+                  f"{roof['compute_s'] * 1e6:.1f}us, memory "
+                  f"{roof['memory_s'] * 1e6:.1f}us, collective "
+                  f"{roof['collective_s'] * 1e6:.1f}us — dominant: "
+                  f"**{roof['dominant']}**"]
+    return lines + [""]
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:])
+    for path in paths:
+        if not os.path.exists(path):
+            continue
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+            if "rows" in blob:
+                lines = _bench_md(path, blob)
+            elif "families" in blob:
+                lines = _profile_md(path, blob)
+            else:
+                lines = [f"### `{os.path.basename(path)}`", "",
+                         "unrecognized artifact shape (no rows/families)", ""]
+        except Exception as e:
+            lines = [f"### `{os.path.basename(path)}`", "",
+                     f"unreadable: {type(e).__name__}: {e}", ""]
+        print("\n".join(lines))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,12 +16,14 @@ from repro.core.hardware import (  # noqa: F401
     register_profile, resolve_hardware, resolve_profile,
 )
 from repro.core.registry import (  # noqa: F401
-    GLOBAL_REGISTRY, KNOWN_OPS, LookupResult, OP_FLASH_ATTENTION, OP_GEMM,
-    TileRegistry, get_tile_config,
+    GLOBAL_REGISTRY, KNOWN_OPS, LookupResult, OP_DECODE_LOOP,
+    OP_FLASH_ATTENTION, OP_GEMM, TileRegistry, get_tile_config,
+    mesh_hardware_key,
 )
 from repro.core.tile_config import (  # noqa: F401
-    FLASH_INTERPRET_SPACE, FlashAttentionConfig, FlashTuningSpace,
-    INTERPRET_SPACE, TileConfig, TuningSpace, square,
+    FLASH_INTERPRET_SPACE, DecodeLoopConfig, DecodeLoopTuningSpace,
+    FlashAttentionConfig, FlashTuningSpace, INTERPRET_SPACE, TileConfig,
+    TuningSpace, square,
 )
 from repro.core.tuner import (  # noqa: F401
     SEARCH_EXHAUSTIVE, SEARCH_GUIDED, SweepResult, sweep_flash_attention,

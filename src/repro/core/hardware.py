@@ -71,6 +71,12 @@ class HardwareProfile:
     default_backend: str = "pallas-tpu"   # kernels.ops backend string
     gemm_block: Tuple[int, int, int] = (128, 128, 128)   # seeded default tier
     flash_block: Tuple[int, int] = (128, 128)
+    #: XLA flags enabling async collectives / latency-hiding scheduling on
+    #: this backend.  Applied by ``launch.mesh.apply_latency_hiding_flags``
+    #: *before* backend init (XLA reads XLA_FLAGS once), so collectives the
+    #: decode loop issues can overlap with compute instead of serializing it.
+    #: Empty for backends whose runtime has no such scheduler (interpret CPU).
+    xla_latency_flags: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.platform not in PLATFORMS:
@@ -103,6 +109,12 @@ TPU_V5E = HardwareProfile(
     default_backend="pallas-tpu",
     gemm_block=(128, 128, 128),
     flash_block=(128, 128),
+    # TPU collectives already run on dedicated ICI hardware; only ask the
+    # scheduler to fuse/overlap all-gathers with the compute stream.
+    xla_latency_flags=(
+        "--xla_tpu_enable_async_collective_fusion=true",
+        "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    ),
 )
 
 GPU_GENERIC = HardwareProfile(
@@ -120,6 +132,13 @@ GPU_GENERIC = HardwareProfile(
     default_backend="xla",    # vendor-library path until a Triton lowering lands
     gemm_block=(64, 128, 128),
     flash_block=(64, 64),
+    # The standard GPU latency-hiding set: async collectives on their own
+    # high-priority stream, scheduled to overlap with compute.
+    xla_latency_flags=(
+        "--xla_gpu_enable_async_collectives=true",
+        "--xla_gpu_enable_latency_hiding_scheduler=true",
+        "--xla_gpu_enable_highest_priority_async_stream=true",
+    ),
 )
 
 # The pallas-interpret backend on this host: the one we can actually measure.

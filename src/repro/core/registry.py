@@ -50,14 +50,29 @@ from typing import Dict, Optional, Tuple, Union
 import jax.numpy as jnp
 
 from repro.core import hardware as hw
-from repro.core.tile_config import FlashAttentionConfig, TileConfig
+from repro.core.tile_config import (DecodeLoopConfig, FlashAttentionConfig,
+                                    TileConfig)
 
 #: op names — the kernel families the tuning framework knows about
 OP_GEMM = "gemm"
 OP_FLASH_ATTENTION = "flash_attention"
-KNOWN_OPS = (OP_GEMM, OP_FLASH_ATTENTION)
+OP_DECODE_LOOP = "decode_loop"
+KNOWN_OPS = (OP_GEMM, OP_FLASH_ATTENTION, OP_DECODE_LOOP)
 
-AnyConfig = Union[TileConfig, FlashAttentionConfig]
+AnyConfig = Union[TileConfig, FlashAttentionConfig, DecodeLoopConfig]
+
+
+def mesh_hardware_key(hardware: str, mesh: Optional[str]) -> str:
+    """Registry bucket name for mesh-keyed tuned entries.
+
+    The paper keys tuned parameters by architecture; a sharded run adds a
+    second coordinate — the *topology* — because the best block (or decode
+    unroll) on ``data=4,model=2`` need not match one chip.  Entries tuned
+    for a specific mesh live under ``<hardware>@<mesh-label>`` (e.g.
+    ``cpu-interpret@data4xmodel2``) and are consulted before the plain
+    per-hardware tiers.
+    """
+    return f"{hardware}@{mesh}" if mesh else hardware
 
 # ---------------------------------------------------------------------------
 # Defaults (the #define GPU_ELEM_NUM / OMP_ELEM_NUM analogue): the untuned
@@ -68,6 +83,7 @@ AnyConfig = Union[TileConfig, FlashAttentionConfig]
 _FALLBACK: Dict[str, AnyConfig] = {
     OP_GEMM: TileConfig(128, 128, 128),
     OP_FLASH_ATTENTION: FlashAttentionConfig(128, 128),
+    OP_DECODE_LOOP: DecodeLoopConfig(1),
 }
 
 #: hardware names already warned about (once-per-process, tests reset it)
@@ -102,13 +118,15 @@ def _seeded_default(op: str, hardware: str) -> Tuple[Optional[AnyConfig], str]:
     return config_from_block(op, block), source
 
 #: per-op config class — used to rebuild configs from persisted block tuples
-CONFIG_CLASS = {OP_GEMM: TileConfig, OP_FLASH_ATTENTION: FlashAttentionConfig}
+CONFIG_CLASS = {OP_GEMM: TileConfig, OP_FLASH_ATTENTION: FlashAttentionConfig,
+                OP_DECODE_LOOP: DecodeLoopConfig}
 
 #: length of each op's problem-shape tuple: gemm (m, k, n); flash
-#: (sq, skv, head_dim).  The block-tuple length is derived from the config
-#: class's fields — together with CONFIG_CLASS/_DEFAULTS/_FALLBACK this is
-#: the one place to extend when adding an op.
-OP_SHAPE_LEN = {OP_GEMM: 3, OP_FLASH_ATTENTION: 3}
+#: (sq, skv, head_dim); decode_loop (max_batch, max_len).  The block-tuple
+#: length is derived from the config class's fields — together with
+#: CONFIG_CLASS/_DEFAULTS/_FALLBACK this is the one place to extend when
+#: adding an op.
+OP_SHAPE_LEN = {OP_GEMM: 3, OP_FLASH_ATTENTION: 3, OP_DECODE_LOOP: 2}
 OP_BLOCK_LEN = {op: len(dataclasses.fields(cls))
                 for op, cls in CONFIG_CLASS.items()}
 
@@ -155,6 +173,9 @@ class LookupResult:
     matched_shape: Optional[Tuple[int, ...]] = None
     distance: float = 0.0
     op: str = OP_GEMM
+    #: mesh label of the bucket that satisfied the lookup (None = the plain
+    #: per-hardware tiers; set only when a mesh-keyed entry won)
+    mesh: Optional[str] = None
 
 
 class TileRegistry:
@@ -203,33 +224,53 @@ class TileRegistry:
 
     # -- lookup --------------------------------------------------------
     def lookup_op(self, op: str, hardware: str, dtype,
-                  shape: Optional[Tuple[int, ...]] = None) -> LookupResult:
+                  shape: Optional[Tuple[int, ...]] = None,
+                  mesh: Optional[str] = None) -> LookupResult:
         """Resolve a config for ``op``, reporting which tier satisfied it.
 
         ``hardware`` is alias-canonicalized (``host-cpu`` -> ``cpu-interpret``)
         so entries stored under a legacy name and lookups under the new one
-        land in the same bucket.
+        land in the same bucket.  When ``mesh`` (a topology label such as
+        ``"data4xmodel2"``) is given, the mesh-keyed bucket
+        ``<hardware>@<mesh>`` is consulted first — its exact/nearest/generic
+        tiers outrank every plain-hardware tier, because a block tuned for
+        this topology beats a block tuned for one chip — before falling back
+        to the topology-agnostic path.
         """
         self._ensure_autoloaded()
         hardware = hw.canonical_name(hardware)
         dt = jnp.dtype(dtype).name
+        if mesh:
+            mesh_hw = mesh_hardware_key(hardware, mesh)
+            with self._lock:
+                res = self._tuned_locked(op, mesh_hw, dt, shape)
+            if res is not None:
+                return self._count(dataclasses.replace(res, mesh=mesh))
         with self._lock:
-            if shape is not None:
-                bucket = self._exact.get((op, hardware, dt))
-                hit = bucket.get(tuple(shape)) if bucket else None
-                if hit is not None:
-                    res = LookupResult(hit, "exact", tuple(shape), op=op)
-                    return self._count(res)
-                near = self._nearest_locked(op, hardware, dt, tuple(shape))
-                if near is not None:
-                    return self._count(near)
-            hit = self._generic.get((op, hardware, dt))
-            if hit is not None:
-                return self._count(LookupResult(hit, "generic", op=op))
+            res = self._tuned_locked(op, hardware, dt, shape)
+        if res is not None:
+            return self._count(res)
         cfg, source = _seeded_default(op, hardware)
         if cfg is not None:
             return self._count(LookupResult(cfg, source, op=op))
         return self._count(LookupResult(_FALLBACK[op], "fallback", op=op))
+
+    def _tuned_locked(self, op: str, hardware: str, dt: str,
+                      shape: Optional[Tuple[int, ...]],
+                      ) -> Optional[LookupResult]:
+        """exact > nearest > generic within one hardware bucket, or None."""
+        if shape is not None:
+            bucket = self._exact.get((op, hardware, dt))
+            hit = bucket.get(tuple(shape)) if bucket else None
+            if hit is not None:
+                return LookupResult(hit, "exact", tuple(shape), op=op)
+            near = self._nearest_locked(op, hardware, dt, tuple(shape))
+            if near is not None:
+                return near
+        hit = self._generic.get((op, hardware, dt))
+        if hit is not None:
+            return LookupResult(hit, "generic", op=op)
+        return None
 
     def lookup(self, hardware: str, dtype, m: int = None, k: int = None,
                n: int = None) -> LookupResult:
@@ -262,8 +303,9 @@ class TileRegistry:
         return res
 
     def get_op(self, op: str, hardware: str, dtype,
-               shape: Optional[Tuple[int, ...]] = None) -> AnyConfig:
-        return self.lookup_op(op, hardware, dtype, shape).config
+               shape: Optional[Tuple[int, ...]] = None,
+               mesh: Optional[str] = None) -> AnyConfig:
+        return self.lookup_op(op, hardware, dtype, shape, mesh=mesh).config
 
     def get(self, hardware: str, dtype, m: int = None, k: int = None,
             n: int = None) -> TileConfig:
@@ -271,12 +313,13 @@ class TileRegistry:
 
     # -- update --------------------------------------------------------
     def put_op(self, op: str, cfg: AnyConfig, hardware: str, dtype,
-               shape: Optional[Tuple[int, ...]] = None) -> None:
+               shape: Optional[Tuple[int, ...]] = None,
+               mesh: Optional[str] = None) -> None:
         if op not in CONFIG_CLASS:
             raise ValueError(f"unknown op {op!r}; known: {sorted(CONFIG_CLASS)}")
         # Canonicalize legacy aliases on write too, so a tuned/host-cpu.json
         # loaded into the registry is reachable from cpu-interpret lookups.
-        hardware = hw.canonical_name(hardware)
+        hardware = mesh_hardware_key(hw.canonical_name(hardware), mesh)
         dt = jnp.dtype(dtype).name
         with self._lock:
             if shape is None:

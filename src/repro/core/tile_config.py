@@ -214,3 +214,41 @@ FLASH_INTERPRET_SPACE = FlashTuningSpace(
     bq_candidates=(8, 16, 32, 64),
     bk_candidates=(16, 32, 64),
 )
+
+
+# ---------------------------------------------------------------------------
+# Serve-engine decode loop (op = "decode_loop")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, order=True)
+class DecodeLoopConfig:
+    """Schedule knob of the serve engine's fused decode loop.
+
+    ``unroll`` is how many tokens each ``while_loop`` iteration decodes.
+    Every loop spin is a cross-device sync point (cond broadcast + thunk
+    dispatch on every mesh device), so on a sharded topology fatter
+    iterations hide dispatch latency behind compute; on one chip the spin is
+    cheap and ``unroll=1`` keeps the early-exit granularity fine.  This is
+    the first op whose best value depends on the *mesh* rather than the
+    problem shape alone — its tuned entries carry the topology in the op key
+    (``mesh="data4xmodel2"``).
+    """
+    unroll: int = 1
+
+    @property
+    def label(self) -> str:
+        return f"u{self.unroll}"
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeLoopTuningSpace:
+    """Candidate unroll factors for the decode-loop sweep (powers of two, so
+    any power-of-two decode-width bucket divides evenly)."""
+    unroll_candidates: Sequence[int] = (1, 2, 4, 8)
+
+    def candidates(self, hw: HardwareSpec = TPU_V5E,
+                   width: int = None) -> Iterator[DecodeLoopConfig]:
+        for u in self.unroll_candidates:
+            if width is not None and u > width:
+                continue
+            yield DecodeLoopConfig(unroll=u)

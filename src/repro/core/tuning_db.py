@@ -22,11 +22,13 @@ auto-loads every DB file at first lookup (so ``gemm_api.matmul`` and
 and ``launch/serve.py`` / ``launch/train.py`` load it explicitly at startup
 and report what they found.
 
-Schema versioning: files carry ``schema_version``.  The current, op-keyed
-schema is version ``3``; the legacy GEMM-only schemas (versions 1-2, entries
-carrying flat ``m/k/n/bm/bk/bn`` fields and no ``op``) still **load** — every
-legacy entry migrates to ``op="gemm"`` on read and is rewritten op-keyed on
-the next save.  Versions *newer* than the library raise
+Schema versioning: files carry ``schema_version``.  The current schema is
+version ``4`` (op-keyed entries with an optional per-entry ``mesh`` topology
+label, e.g. ``"data4xmodel2"`` for the serve engine's ``decode_loop`` op).
+Version ``3`` (op-keyed, no mesh) reads unchanged; the legacy GEMM-only
+schemas (versions 1-2, entries carrying flat ``m/k/n/bm/bk/bn`` fields and no
+``op``) still **load** — every legacy entry migrates to ``op="gemm"`` on read
+and is rewritten op-keyed on the next save.  Versions *newer* than the library raise
 :class:`TuningDBError` so a stale library can never silently misread a future
 artifact (auto-load downgrades that to a warning and skips the file).
 """
@@ -42,10 +44,11 @@ from typing import Dict, Iterable, List, Optional, Tuple
 from repro.core.registry import (OP_BLOCK_LEN, OP_GEMM, OP_SHAPE_LEN,
                                  block_of, config_from_block)
 
-#: current on-disk schema: op-keyed entries (shape/block tuples + "op")
-SCHEMA_VERSION = 3
-#: older schemas that still load, migrating every entry to op="gemm"
-LEGACY_SCHEMA_VERSIONS = (1, 2)
+#: current on-disk schema: op-keyed entries, optional per-entry "mesh" label
+SCHEMA_VERSION = 4
+#: older schemas that still load: 3 (op-keyed, no mesh field) reads as-is;
+#: 1-2 (flat GEMM-only entries) migrate every entry to op="gemm"
+LEGACY_SCHEMA_VERSIONS = (1, 2, 3)
 
 #: env var overriding where tuned DBs are read from / written to
 TUNED_DIR_ENV = "REPRO_TUNED_DIR"
@@ -72,6 +75,11 @@ class TuningRecord:
     source: str = "model"        # "model" | "measure" | "measure-pruned"
     seconds: float = 0.0         # winning score (estimated or measured)
     gflops: float = 0.0
+    #: topology label ("data4xmodel2") for entries tuned on a specific mesh;
+    #: None = topology-agnostic (the overwhelmingly common case).  Mesh-keyed
+    #: records land in the registry's ``<hardware>@<mesh>`` bucket and only
+    #: satisfy lookups made under that same topology.
+    mesh: Optional[str] = None
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(x) for x in self.shape))
@@ -123,10 +131,13 @@ class TuningRecord:
         return config_from_block(self.op, self.block)
 
     def to_json(self) -> dict:
-        return {"op": self.op, "dtype": self.dtype,
-                "shape": list(self.shape), "block": list(self.block),
-                "source": self.source, "seconds": self.seconds,
-                "gflops": self.gflops}
+        out = {"op": self.op, "dtype": self.dtype,
+               "shape": list(self.shape), "block": list(self.block),
+               "source": self.source, "seconds": self.seconds,
+               "gflops": self.gflops}
+        if self.mesh:    # omitted when topology-agnostic (schema <= 3 shape)
+            out["mesh"] = self.mesh
+        return out
 
     @classmethod
     def from_json(cls, blob: dict) -> "TuningRecord":
@@ -137,7 +148,8 @@ class TuningRecord:
                            block=tuple(blob["block"]),
                            source=blob.get("source", "model"),
                            seconds=blob.get("seconds", 0.0),
-                           gflops=blob.get("gflops", 0.0))
+                           gflops=blob.get("gflops", 0.0),
+                           mesh=blob.get("mesh"))
             # legacy (schema <= 2) flat GEMM entry -> migrate to op="gemm"
             return cls.gemm(blob["dtype"], blob["m"], blob["k"], blob["n"],
                             blob["bm"], blob["bk"], blob["bn"],
@@ -171,7 +183,9 @@ class TuningDB:
 
     def __init__(self, hardware: str):
         self.hardware = hardware
-        self._records: Dict[Tuple[str, str, Tuple[int, ...]], TuningRecord] = {}
+        # key: (op, dtype, shape, mesh) — mesh None for topology-agnostic
+        self._records: Dict[Tuple[str, str, Tuple[int, ...], Optional[str]],
+                            TuningRecord] = {}
 
     # -- content -------------------------------------------------------
     #: wall-clock measurements outrank analytic estimates — their "seconds"
@@ -189,7 +203,7 @@ class TuningDB:
           authoritative; keeping a lower stale estimate would pin pre-fix
           winners forever and make ``tune.py diff`` drift unrecoverable.
         """
-        key = (rec.op, rec.dtype, rec.shape)
+        key = (rec.op, rec.dtype, rec.shape, rec.mesh)
         old = self._records.get(key)
         if keep_best and old is not None:
             new_rank = self._SOURCE_RANK.get(rec.source, 0)
@@ -202,15 +216,16 @@ class TuningDB:
         self._records[key] = rec
 
     def records(self, op: Optional[str] = None) -> List[TuningRecord]:
-        keys = sorted(k for k in self._records if op is None or k[0] == op)
+        keys = sorted((k for k in self._records if op is None or k[0] == op),
+                      key=lambda k: (k[0], k[1], k[2], k[3] or ""))
         return [self._records[k] for k in keys]
 
     def ops(self) -> List[str]:
         return sorted({k[0] for k in self._records})
 
-    def get_op(self, op: str, dtype: str,
-               shape: Tuple[int, ...]) -> Optional[TuningRecord]:
-        return self._records.get((op, dtype, tuple(shape)))
+    def get_op(self, op: str, dtype: str, shape: Tuple[int, ...],
+               mesh: Optional[str] = None) -> Optional[TuningRecord]:
+        return self._records.get((op, dtype, tuple(shape), mesh))
 
     def get(self, dtype: str, m: int, k: int, n: int) -> Optional[TuningRecord]:
         """GEMM-compat accessor (pre-op-keyed call signature)."""
@@ -286,6 +301,8 @@ class TuningDB:
                 t = f"{r.seconds * 1e6:.1f} us" if r.seconds else "-"
                 gf = f"{r.gflops:.0f}" if r.gflops else "-"
                 shape = "x".join(str(s) for s in r.shape)
+                if r.mesh:
+                    shape += f" @{r.mesh}"
                 lines.append(f"| {r.dtype} | {shape} | {r.config.label} "
                              f"| {r.source} | {t} | {gf} |")
         return "\n".join(lines)
@@ -324,7 +341,8 @@ def load_into_registry(registry, path: str, *, strict: bool = False) -> int:
         warnings.warn(f"skipping tuning DB {path}: {e}", stacklevel=2)
         return 0
     for rec in db.records():
-        registry.put_op(rec.op, rec.config, db.hardware, rec.dtype, rec.shape)
+        registry.put_op(rec.op, rec.config, db.hardware, rec.dtype, rec.shape,
+                        mesh=rec.mesh)
     return len(db)
 
 

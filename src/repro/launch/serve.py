@@ -50,6 +50,9 @@ def main() -> None:
                          "(default: single-device)")
     ap.add_argument("--tuned-dir", default=None,
                     help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="capture a jax.profiler trace of the generate call "
+                         "into this dir (post-process: scripts/profile.py)")
     args = ap.parse_args()
 
     hardware = resolve_hardware(args.hardware)
@@ -60,7 +63,9 @@ def main() -> None:
     mesh = None
     if args.mesh:
         from repro.launch.mesh import build_mesh, describe_mesh
-        mesh = build_mesh(args.mesh)
+        # hardware= applies the profile's latency-hiding XLA flags before
+        # the first device touch (async collectives for the decode loop)
+        mesh = build_mesh(args.mesh, hardware=hardware)
         print(f"[mesh] {describe_mesh(mesh)}")
 
     loaded = tuning_db.load_all(GLOBAL_REGISTRY, args.tuned_dir)
@@ -90,7 +95,12 @@ def main() -> None:
                              profile=args.stats,
                              hardware=hardware,
                              mesh=mesh))
-    outs = eng.generate(prompts, args.max_new, extra_inputs=extra or None)
+    from repro.profiling import trace
+    with trace(args.trace_dir, enabled=bool(args.trace_dir)) as session:
+        outs = eng.generate(prompts, args.max_new, extra_inputs=extra or None)
+    if session.enabled:
+        print(f"[trace] captured {len(session.trace_files())} trace file(s) "
+              f"under {args.trace_dir}")
     for p, o in zip(prompts, outs):
         print(f"prompt={p} -> {o}")
 

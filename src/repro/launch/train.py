@@ -58,6 +58,9 @@ def main() -> None:
                          "(default: $REPRO_HARDWARE or auto-detect)")
     ap.add_argument("--tuned-dir", default=None,
                     help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="capture a jax.profiler trace of the training run "
+                         "into this dir (post-process: scripts/profile.py)")
     args = ap.parse_args()
 
     hardware = resolve_hardware(args.hardware)
@@ -82,7 +85,9 @@ def main() -> None:
 
     mesh = rules = None
     if args.mesh:
-        mesh = build_mesh(args.mesh)
+        # hardware= applies the profile's latency-hiding XLA flags before
+        # the first device touch (overlap grad all-reduces with compute)
+        mesh = build_mesh(args.mesh, hardware=hardware)
     elif args.mesh_data * args.mesh_model > 1:
         mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
     if mesh is not None:
@@ -110,7 +115,9 @@ def main() -> None:
         state = init_train_state(model, opt, jax.random.PRNGKey(0),
                                  args.compress_grads)
 
-    with execution_context(hardware=hardware):
+    from repro.profiling import trace
+    with execution_context(hardware=hardware), \
+            trace(args.trace_dir, enabled=bool(args.trace_dir)):
         state, history = trainer.run(state, start_step=start)
     for step, loss in history:
         print(f"step {step:6d}  loss {loss:.4f}")

@@ -1,0 +1,239 @@
+"""Trace post-processing: Chrome-trace -> per-op-family PROFILE_*.json.
+
+``jax.profiler`` writes gzipped Chrome-trace JSON under
+``<dir>/plugins/profile/<timestamp>/<host>.trace.json.gz``; everything here
+parses that with the stdlib (gzip + json — no tensorboard/tensorflow
+dependency) and rolls device time up into the op families the tuning work
+cares about:
+
+* **collective** — all-reduce/all-gather/… (the mesh tax; what serialized
+  the 0.54x decode loop);
+* **gemm** — dot/convolution (the roofline's compute term);
+* **attention** — flash/softmax fusions;
+* **host_transfer** — device<->host copies; their *count* is the
+  ``host_syncs`` metric (the fused decode loop's "one device_get per wave"
+  invariant made measurable);
+* **other** — everything else (elementwise fusions, dynamic-slice, …).
+
+Only events carrying an ``args.hlo_op`` enter the op universe — that is how
+XLA device ops are distinguished from python-tracer/runtime scaffolding —
+and container ops (``while``/``call``/…, whose duration covers the leaf ops
+they re-dispatch) are dropped so nothing is double-counted.
+``annotate(...)`` markers (``serve.*``/``train.*``) are collected
+separately: they partition *wall* time where the families partition
+*device* time.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import re
+from typing import Dict, List, Optional, Sequence
+
+#: op families of the breakdown, in render order
+FAMILIES = ("collective", "gemm", "attention", "host_transfer", "other")
+
+#: bump on any incompatible PROFILE_*.json layout change
+PROFILE_SCHEMA_VERSION = 1
+
+# Container/control HLO ops re-dispatch their body ops: their duration is
+# the sum of leaves already counted, so they are excluded from the universe.
+_CONTAINER_RE = re.compile(
+    r"^(while|call|conditional|tuple|get-tuple-element|parameter|constant)"
+    r"(\.|$)")
+_COLLECTIVE_RE = re.compile(
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast")
+_GEMM_RE = re.compile(r"^(dot|convolution|gemm|cublas|custom-call.*gemm)")
+_ATTENTION_RE = re.compile(
+    r"flash|attention|softmax|exponential|reduce-window|scaled")
+# Host<->device copies show up as runtime events (no hlo_op): the blocking
+# np.asarray(jax.Array) fetch of jax.device_get, plus explicit transfers.
+_TRANSFER_RE = re.compile(
+    r"np\.asarray\(jax\.Array\)|TransferTo|TransferFrom|device_get|"
+    r"copy_to_host|BufferToHost")
+#: markers produced by repro.profiling.annotate in the serve/train paths
+_ANNOTATION_RE = re.compile(r"^(serve|train)\.[\w.]+$")
+
+
+def classify_event_name(name: str) -> str:
+    """Family of one HLO-op name (``host_transfer`` never comes from here —
+    transfers are runtime events without an ``hlo_op``)."""
+    low = name.lower()
+    if _COLLECTIVE_RE.search(low):
+        return "collective"
+    if _GEMM_RE.search(low):
+        return "gemm"
+    if _ATTENTION_RE.search(low):
+        return "attention"
+    return "other"
+
+
+def _base_op(name: str) -> str:
+    """``all-reduce.7`` -> ``all-reduce`` (aggregate over SSA numbering)."""
+    return re.sub(r"\.\d+$", "", name)
+
+
+def find_capture_dirs(trace_dir: str) -> List[str]:
+    """Capture directories under a trace dir, newest first."""
+    pattern = os.path.join(trace_dir, "plugins", "profile", "*")
+    dirs = [d for d in glob.glob(pattern) if os.path.isdir(d)]
+    return sorted(dirs, key=os.path.getmtime, reverse=True)
+
+
+def load_trace_events(trace_dir: str, capture: str = "latest") -> List[dict]:
+    """Parse the Chrome-trace events of one capture (default: the newest).
+
+    Raises ``FileNotFoundError`` when the directory holds no capture —
+    the CI leg's "the profiler actually ran" check.
+    """
+    captures = find_capture_dirs(trace_dir)
+    if not captures:
+        raise FileNotFoundError(
+            f"no profiler capture under {trace_dir!r} "
+            "(expected plugins/profile/<timestamp>/*.trace.json.gz)")
+    chosen = captures[0] if capture == "latest" else capture
+    events: List[dict] = []
+    for path in sorted(glob.glob(os.path.join(chosen, "*.trace.json.gz"))):
+        with gzip.open(path, "rt") as f:
+            events.extend(json.load(f).get("traceEvents", []))
+    return events
+
+
+def summarize_events(events: Sequence[dict]) -> Dict[str, object]:
+    """Roll Chrome-trace events up into the breakdown core.
+
+    Returns ``totals`` (op/wall microseconds), per-family us/count/fraction,
+    ``top_ops`` (by device time, SSA numbering folded), ``annotations``
+    (the ``serve.*``/``train.*`` markers), and ``host_syncs``.
+    """
+    fam_us = {f: 0.0 for f in FAMILIES}
+    fam_n = {f: 0 for f in FAMILIES}
+    op_us: Dict[str, float] = {}
+    op_n: Dict[str, int] = {}
+    ann_us: Dict[str, float] = {}
+    ann_n: Dict[str, int] = {}
+    t_min, t_max = None, None
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        dur = float(ev.get("dur", 0.0))
+        name = ev.get("name", "")
+        ts = ev.get("ts")
+        if ts is not None:
+            t_min = ts if t_min is None else min(t_min, ts)
+            t_max = ts + dur if t_max is None else max(t_max, ts + dur)
+        hlo = (ev.get("args") or {}).get("hlo_op")
+        if hlo:
+            if _CONTAINER_RE.match(hlo):
+                continue
+            fam = classify_event_name(hlo)
+            fam_us[fam] += dur
+            fam_n[fam] += 1
+            base = _base_op(hlo)
+            op_us[base] = op_us.get(base, 0.0) + dur
+            op_n[base] = op_n.get(base, 0) + 1
+        elif _ANNOTATION_RE.match(name):
+            ann_us[name] = ann_us.get(name, 0.0) + dur
+            ann_n[name] = ann_n.get(name, 0) + 1
+        elif _TRANSFER_RE.search(name):
+            fam_us["host_transfer"] += dur
+            fam_n["host_transfer"] += 1
+    total_us = sum(fam_us.values())
+    families = {
+        f: {"us": round(fam_us[f], 3), "count": fam_n[f],
+            "fraction": round(fam_us[f] / total_us, 6) if total_us else 0.0}
+        for f in FAMILIES}
+    top = sorted(op_us, key=op_us.get, reverse=True)[:12]
+    return {
+        "totals": {
+            "op_us": round(sum(fam_us[f] for f in FAMILIES
+                               if f != "host_transfer"), 3),
+            "family_us": round(total_us, 3),
+            "wall_us": round((t_max - t_min), 3) if t_min is not None else 0.0,
+        },
+        "families": families,
+        "top_ops": [{"name": o, "us": round(op_us[o], 3), "count": op_n[o]}
+                    for o in top],
+        "annotations": {a: {"us": round(ann_us[a], 3), "count": ann_n[a]}
+                        for a in sorted(ann_us)},
+        "host_syncs": fam_n["host_transfer"],
+    }
+
+
+def build_profile(kind: str, *,
+                  trace_dir: Optional[str] = None,
+                  events: Optional[Sequence[dict]] = None,
+                  hardware: Optional[str] = None,
+                  mesh: Optional[str] = None,
+                  roofline: Optional[dict] = None,
+                  extra: Optional[dict] = None) -> Dict[str, object]:
+    """Assemble the ``PROFILE_*.json`` blob from a trace dir or raw events."""
+    if events is None:
+        if trace_dir is None:
+            raise ValueError("build_profile needs trace_dir or events")
+        events = load_trace_events(trace_dir)
+    blob: Dict[str, object] = {
+        "schema_version": PROFILE_SCHEMA_VERSION,
+        "kind": kind,
+        "hardware": hardware,
+        "mesh": mesh,
+    }
+    blob.update(summarize_events(events))
+    if roofline is not None:
+        blob["roofline"] = roofline
+    if extra:
+        blob.update(extra)
+    return blob
+
+
+def validate_profile(blob: dict) -> dict:
+    """Schema check for PROFILE_*.json (the CI profiling leg's assertion).
+
+    Raises ``ValueError`` listing every violation; returns the blob so the
+    call nests in expressions.  "Valid" = versioned, kind-tagged, all op
+    families present with consistent numbers, and *nonzero* totals — a
+    trace that captured nothing fails here rather than greening CI.
+    """
+    problems: List[str] = []
+    if blob.get("schema_version") != PROFILE_SCHEMA_VERSION:
+        problems.append(
+            f"schema_version {blob.get('schema_version')!r} != "
+            f"{PROFILE_SCHEMA_VERSION}")
+    if not isinstance(blob.get("kind"), str) or not blob.get("kind"):
+        problems.append("missing kind")
+    fams = blob.get("families")
+    if not isinstance(fams, dict):
+        problems.append("missing families")
+    else:
+        for f in FAMILIES:
+            entry = fams.get(f)
+            if not isinstance(entry, dict):
+                problems.append(f"families[{f!r}] missing")
+                continue
+            for field in ("us", "count", "fraction"):
+                v = entry.get(field)
+                if not isinstance(v, (int, float)) or v < 0:
+                    problems.append(f"families[{f!r}].{field} bad: {v!r}")
+    totals = blob.get("totals")
+    if not isinstance(totals, dict):
+        problems.append("missing totals")
+    else:
+        for field in ("op_us", "wall_us"):
+            v = totals.get(field)
+            if not isinstance(v, (int, float)):
+                problems.append(f"totals.{field} bad: {v!r}")
+            elif v <= 0:
+                problems.append(f"totals.{field} must be > 0, got {v!r}")
+    hs = blob.get("host_syncs")
+    if not isinstance(hs, int) or hs < 0:
+        problems.append(f"host_syncs bad: {hs!r}")
+    if not isinstance(blob.get("annotations"), dict):
+        problems.append("missing annotations")
+    if not isinstance(blob.get("top_ops"), list):
+        problems.append("missing top_ops")
+    if problems:
+        raise ValueError("invalid PROFILE blob: " + "; ".join(problems))
+    return blob

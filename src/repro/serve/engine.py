@@ -80,6 +80,11 @@ class ServeConfig:
     # jax.sharding.Mesh, or None.  None picks up the ambient
     # distributed.ctx.use_mesh() topology (single-device when absent).
     mesh: Optional[Union[str, jax.sharding.Mesh]] = None
+    # Tokens decoded per fused-loop iteration.  Every while-loop spin is a
+    # cross-device sync point on a mesh, so fatter iterations hide dispatch
+    # latency.  None resolves: mesh-keyed tuned entry (decode_loop in the
+    # TuningDB, topology in the key) > heuristic (4 on a mesh, 1 alone).
+    decode_unroll: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -153,13 +158,23 @@ class Engine:
         self.rules = None
         if mesh is not None:
             from repro.distributed import sharding as sh
-            self.rules = rules or sh.rules_for_mesh(mesh)
+            # Inference rules: no FSDP.  Training shards weights over the
+            # data axes and re-gathers them per step — amortized over a big
+            # batch.  Decode GEMMs are tiny (B x 1 tokens), so per-step
+            # weight all-gathers SERIALIZE the loop (profiling showed them
+            # dominating decode wall-clock at 0.54x of the sync baseline).
+            # Serving therefore replicates weights over the data axes and
+            # shards them only over the tensor axis (classic inference TP);
+            # explicit ambient rules still win for callers that know better.
+            self.rules = rules or sh.rules_for_mesh(mesh, fsdp=False)
             # Re-place params by the rules (no-op layout change on values:
             # sharded and single-device engines stay token-for-token equal).
             self.params = sh.shard_params(params, mesh, self.rules,
                                           model.template)
         self._prefill = jax.jit(self._with_mesh(model.prefill))
         self._loop = None                 # built lazily (per-engine closure)
+        self._unroll: Optional[int] = None         # resolved lazily, cached
+        self._unroll_source: Optional[str] = None
         self._cache = None                # allocated once, reused across calls
         self._sched = _SlotScheduler(cfg.max_batch)
         self._queue: List[_Request] = []
@@ -207,12 +222,42 @@ class Engine:
             key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
 
     # -- fused device-resident decode loop -----------------------------
+    def _resolve_unroll(self) -> int:
+        """Tokens decoded per fused-loop iteration.
+
+        Resolution: explicit ``ServeConfig.decode_unroll`` > a mesh-keyed
+        ``decode_loop`` tuned entry (the topology is part of the op key, so
+        ``data=4,model=2`` can tune a different unroll than a single chip) >
+        the heuristic (4 on a mesh — spin sync points are collectives there
+        — else 1).  The resolved value and its provenance land in
+        :meth:`stats` as ``decode_unroll`` / ``decode_unroll_source``.
+        """
+        if self._unroll is not None:
+            return self._unroll
+        if self.cfg.decode_unroll is not None:
+            self._unroll = max(int(self.cfg.decode_unroll), 1)
+            self._unroll_source = "config"
+        else:
+            from repro.core.registry import GLOBAL_REGISTRY, OP_DECODE_LOOP
+            from repro.launch.mesh import mesh_axis_label
+            res = GLOBAL_REGISTRY.lookup_op(
+                OP_DECODE_LOOP, self.hardware, self.model.cfg.dtype,
+                (self.cfg.max_batch, self.cfg.max_len),
+                mesh=mesh_axis_label(self.mesh))
+            if res.source in ("exact", "nearest", "generic"):
+                self._unroll = max(int(res.config.unroll), 1)
+                self._unroll_source = f"tuned:{res.source}"
+            else:
+                self._unroll = 4 if self.mesh is not None else 1
+                self._unroll_source = "heuristic"
+        return self._unroll
+
     def _build_loop(self):
         decode = self.model.decode_step
         eos = self.cfg.eos_token
 
         def loop(params, cache, logits0, key, kv_start, budget, offset0, *,
-                 width: int):
+                 width: int, unroll: int):
             b = logits0.shape[0]
             # Split BEFORE the first sample: the parent key is reserved for
             # splitting only, so the first token is uncorrelated with later
@@ -223,39 +268,59 @@ class Engine:
             buf = jnp.zeros((b, width), jnp.int32)
             lens = jnp.zeros((b,), jnp.int32)
 
+            # ``alldone`` rides in the carry so the while cond is a plain
+            # scalar read.  Evaluating ``done.all()`` inside cond (and again
+            # inside body's predicate) costs a cross-device reduction per
+            # spin when ``done`` picks up a batch sharding — two extra
+            # blocking collectives per token that serialize the mesh decode
+            # loop.  Computing it ONCE per body and carrying the scalar
+            # keeps every control decision local.
             def cond(carry):
-                step, cur, done, buf, lens, cache, offset, key = carry
-                return (step < width) & ~done.all()
+                step, cur, done, alldone, buf, lens, cache, offset, key = carry
+                return (step < width) & ~alldone
 
             def body(carry):
-                step, cur, done, buf, lens, cache, offset, key = carry
-                buf = jax.lax.dynamic_update_slice(
-                    buf, jnp.where(done, 0, cur)[:, None], (0, step))
-                lens = lens + jnp.where(done, 0, 1).astype(jnp.int32)
-                if eos is not None:
-                    done = done | (cur == eos)
-                done = done | (lens >= budget)
-                step = step + 1
+                step, cur, done, alldone, buf, lens, cache, offset, key = carry
+                # Unrolled body: each while iteration records + decodes
+                # ``unroll`` tokens.  Every loop spin is a cross-device sync
+                # point on a mesh (cond broadcast + per-device dispatch), so
+                # fewer, fatter iterations hide that latency behind compute;
+                # done/budget bookkeeping stays exact per token via the
+                # masked buffer writes.
+                for _ in range(unroll):
+                    with jax.named_scope("decode_token"):
+                        buf = jax.lax.dynamic_update_slice(
+                            buf, jnp.where(done, 0, cur)[:, None], (0, step))
+                        lens = lens + jnp.where(done, 0, 1).astype(jnp.int32)
+                        if eos is not None:
+                            done = done | (cur == eos)
+                        done = done | (lens >= budget)
+                        alldone = done.all()
+                        step = step + 1
 
-                def advance(op):
-                    cache, cur, key, offset = op
-                    key, sub = jax.random.split(key)
-                    logits, cache = decode(params, cur[:, None], cache,
-                                           offset, kv_start)
-                    return cache, self._sample(logits, sub), key, offset + 1
+                        def advance(op):
+                            cache, cur, key, offset = op
+                            key, sub = jax.random.split(key)
+                            logits, cache = decode(params, cur[:, None],
+                                                   cache, offset, kv_start)
+                            return (cache, self._sample(logits, sub), key,
+                                    offset + 1)
 
-                # Skip the model step once every live slot has finished.
-                cache, cur, key, offset = jax.lax.cond(
-                    (step < width) & ~done.all(), advance, lambda op: op,
-                    (cache, cur, key, offset))
-                return step, cur, done, buf, lens, cache, offset, key
+                        # Skip the model step once every live slot finished.
+                        cache, cur, key, offset = jax.lax.cond(
+                            (step < width) & ~alldone, advance, lambda op: op,
+                            (cache, cur, key, offset))
+                return (step, cur, done, alldone, buf, lens, cache, offset,
+                        key)
 
-            carry = (jnp.int32(0), cur, done, buf, lens, cache, offset0, key)
-            _, _, _, buf, lens, cache, _, _ = jax.lax.while_loop(
+            carry = (jnp.int32(0), cur, done, done.all(), buf, lens, cache,
+                     offset0, key)
+            _, _, _, _, buf, lens, cache, _, _ = jax.lax.while_loop(
                 cond, body, carry)
             return buf, lens, cache
 
-        return jax.jit(self._with_mesh(loop), static_argnames=("width",))
+        return jax.jit(self._with_mesh(loop),
+                       static_argnames=("width", "unroll"))
 
     # -- slot-pool cache -----------------------------------------------
     def _ensure_cache(self):
@@ -302,6 +367,9 @@ class Engine:
             weight_div = sh.local_gemm_divisors(self.mesh, self.rules,
                                                 self.model.template)
             batch_div = sh.axis_size(self.mesh, self.rules.batch_axes)
+        from repro.core.registry import OP_GEMM
+        from repro.launch.mesh import mesh_axis_label
+        mesh_label = mesh_axis_label(self.mesh)
         hw = self.hardware
         dtype = self.model.cfg.dtype
         lookups = {}
@@ -311,7 +379,8 @@ class Engine:
             for dk, dn in weight_div.get((k, n), ((1, 1),)):
                 lm = m // batch_div if m % batch_div == 0 else m
                 lk, ln = k // dk, n // dn
-                res = GLOBAL_REGISTRY.lookup(hw, dtype, lm, lk, ln)
+                res = GLOBAL_REGISTRY.lookup_op(OP_GEMM, hw, dtype,
+                                                (lm, lk, ln), mesh=mesh_label)
                 entry = {
                     "source": res.source,
                     "tile": res.config.label,
@@ -320,6 +389,7 @@ class Engine:
                 key = f"{m}x{k}x{n}"
                 if self.mesh is not None:
                     entry["local_shape"] = f"{lm}x{lk}x{ln}"
+                    entry["mesh"] = res.mesh
                     if len(weight_div.get((k, n), ())) > 1:
                         key = f"{m}x{k}x{n}->{lm}x{lk}x{ln}"
                 lookups[key] = entry
@@ -553,28 +623,38 @@ class Engine:
                     jnp.asarray(arr)[jnp.asarray(rows)])
         # Split the wave over the data axes (identity without a mesh).
         batch = self._place_batch(batch)
-        kv_start_d, budget_d = self._place_batch(
-            (jnp.asarray(kv_start), jnp.asarray(budget)))
+        # Loop CONTROL state (per-slot budgets/offsets and everything
+        # derived from them: done flags, emitted-token buffer) stays
+        # replicated: these are a handful of ints per slot, and sharding
+        # them turns every ``done.all()`` / budget check inside the fused
+        # loop into a blocking cross-device reduction.  Replicated, the
+        # whole control path is local to each device; only the model step
+        # itself (cache, activations) runs sharded.
+        kv_start_d, budget_d = jnp.asarray(kv_start), jnp.asarray(budget)
 
         cache = self._ensure_cache()
         self._record_prefill_flash_tiles(plen)
         self._plen_buckets.add(int(plen))
+        from repro.profiling import annotate
         t0 = time.perf_counter()
-        logits0, cache = self._prefill(self.params, batch, cache)
-        if cfg.profile:
-            jax.block_until_ready(logits0)
+        with annotate("serve.prefill_wave"):
+            logits0, cache = self._prefill(self.params, batch, cache)
+            if cfg.profile:
+                jax.block_until_ready(logits0)
         t1 = time.perf_counter()
 
         if self._loop is None:
             self._loop = self._build_loop()
-        buf, lens, cache = self._loop(
-            self.params, cache, logits0, key, kv_start_d,
-            budget_d, jnp.int32(plen), width=width)
-        self._cache = cache
+        unroll = min(self._resolve_unroll(), width)
+        with annotate("serve.decode_wave"):
+            buf, lens, cache = self._loop(
+                self.params, cache, logits0, key, kv_start_d,
+                budget_d, jnp.int32(plen), width=width, unroll=unroll)
+            self._cache = cache
 
-        # The ONE host transfer of this wave (== of the whole generate call
-        # when the batch fits the slot pool).
-        buf_h, lens_h = jax.device_get((buf, lens))
+            # The ONE host transfer of this wave (== of the whole generate
+            # call when the batch fits the slot pool).
+            buf_h, lens_h = jax.device_get((buf, lens))
         t2 = time.perf_counter()
         self._stats["device_transfers"] += 1
         self._stats["waves"] += 1
@@ -636,6 +716,8 @@ class Engine:
                                               self.model.template),
             }
         out["prefill_plen_buckets"] = sorted(self._plen_buckets)
+        out["decode_unroll"] = self._unroll
+        out["decode_unroll_source"] = self._unroll_source
         out["slots"] = self.cfg.max_batch
         out["slots_admitted"] = self._sched.admitted
         out["slots_evicted"] = self._sched.evicted

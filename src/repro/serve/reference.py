@@ -60,10 +60,18 @@ class PerTokenSyncEngine:
     """Batched greedy generation with a host sync per token (the seed
     engine's execution model; prompts must share one length — no ragged
     handling).  Prefill/decode are jitted once per instance so repeated
-    calls measure steady-state throughput, not compilation."""
+    calls measure steady-state throughput, not compilation.
+
+    ``mesh=`` shards params by the same inference rules the fused engine
+    uses, so the serving benchmark's fused-vs-sync ratio compares the two
+    *execution models* on an identical topology — per-token host syncs
+    (each one a full cross-device round-trip on a mesh) against the fused
+    device-resident loop — rather than conflating the loop structure with
+    single-device-vs-sharded placement."""
 
     def __init__(self, model: Model, params, max_len: int = 512,
-                 eos_token: Optional[int] = None, profile: bool = False):
+                 eos_token: Optional[int] = None, profile: bool = False,
+                 mesh=None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -71,8 +79,32 @@ class PerTokenSyncEngine:
         self.profile = profile             # split prefill/decode wall time
         self.last_prefill_s = 0.0
         self.last_decode_s = 0.0
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+        if isinstance(mesh, str):
+            from repro.launch.mesh import build_mesh
+            mesh = build_mesh(mesh)
+        self.mesh = mesh
+        self.rules = None
+        if mesh is not None:
+            from repro.distributed import sharding as sh
+            self.rules = sh.rules_for_mesh(mesh, fsdp=False)
+            self.params = sh.shard_params(params, mesh, self.rules,
+                                          model.template)
+        self._prefill = jax.jit(self._with_mesh(model.prefill))
+        self._decode = jax.jit(self._with_mesh(model.decode_step))
+
+    def _with_mesh(self, fn):
+        """Trace under the mesh's activation policy (identity without one) —
+        the same wrapper the fused engine applies."""
+        if self.mesh is None:
+            return fn
+        mesh, rules = self.mesh, self.rules
+
+        def wrapped(*args, **kwargs):
+            from repro.distributed.ctx import activation_policy
+            with activation_policy(mesh, rules):
+                return fn(*args, **kwargs)
+
+        return wrapped
 
     def generate(self, prompts: List[List[int]], max_new_tokens: int
                  ) -> List[List[int]]:

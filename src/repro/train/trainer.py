@@ -171,10 +171,12 @@ class Trainer:
         """Run to total_steps; returns (state, history).  Deterministic data
         (keyed by step) makes restart-after-failure exactly replayable."""
         history = []
+        from repro.profiling import annotate
         for step_idx in range(start_step, self.cfg.total_steps):
             batch = self.data_iter(step_idx)
             t0 = time.perf_counter()
-            state, metrics = self._step(state, batch)
+            with annotate("train.step"):
+                state, metrics = self._step(state, batch)
             if self.cfg.step_deadline_s is not None:
                 jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t0

@@ -192,12 +192,12 @@ def test_legacy_host_cpu_db_reachable_from_cpu_interpret_lookups(tmp_path):
 
 def test_committed_cpu_interpret_db_exists_and_loads():
     """Acceptance: tuned/cpu-interpret.json is committed and loads under the
-    cpu-interpret profile (both ops present)."""
+    cpu-interpret profile (kernel ops plus the mesh-keyed decode unroll)."""
     path = os.path.join(REPO, "tuned", f"{CPU_INTERPRET.name}.json")
     assert os.path.exists(path), "tuned/cpu-interpret.json must be committed"
     db = TuningDB.from_file(path)
     assert db.hardware == CPU_INTERPRET.name
-    assert set(db.ops()) == {"gemm", "flash_attention"}
+    assert set(db.ops()) == {"gemm", "flash_attention", "decode_loop"}
     reg = TileRegistry()
     from repro.core.tuning_db import load_into_registry
     assert load_into_registry(reg, path) == len(db) > 0
@@ -313,6 +313,51 @@ def test_bench_compare_fails_when_nonzero_family_drops_to_zero(tmp_path):
                         tolerances={"serving/": 0.99})
     assert proc.returncode == 1, proc.stdout
     assert "went dead" in proc.stdout
+
+
+SPEEDUP_FAMILY = "serving/llama3.2-1b/decode_speedup_fused_vs_sync"
+
+
+def test_bench_compare_require_improvement_gate(tmp_path):
+    """Absolute gate for ratio metrics: >= 1.0 means the fused path wins,
+    whatever the committed baseline says — a blessed-in regression cannot
+    silently return."""
+    winning = [(f"{SPEEDUP_FAMILY}-1.07x", 0.0, 1.07)]
+    losing = [(f"{SPEEDUP_FAMILY}-0.54x", 0.0, 0.54)]
+    # pass: family present and >= 1.0 (the -1.07x suffix normalizes away)
+    proc = _run_compare(tmp_path, winning, winning,
+                        extra_args=["--require-improvement", SPEEDUP_FAMILY])
+    assert proc.returncode == 0, proc.stdout
+    assert "required improvement holds" in proc.stdout
+    # fail: present but < 1.0 — even though the relative trend gate passes
+    proc = _run_compare(tmp_path, losing, losing,
+                        extra_args=["--require-improvement", SPEEDUP_FAMILY])
+    assert proc.returncode == 1, proc.stdout
+    assert "REQUIRED IMPROVEMENT FAILED" in proc.stdout
+    # fail: family missing entirely
+    other = [("serving/llama3.2-1b/prefill_tok_s/B8xP16", 1.0, 10.0)]
+    proc = _run_compare(tmp_path, other, other,
+                        extra_args=["--require-improvement", SPEEDUP_FAMILY])
+    assert proc.returncode == 1, proc.stdout
+    assert "family missing" in proc.stdout
+
+
+def test_bench_compare_refuses_to_bless_failing_requirement(tmp_path):
+    """--write-baseline must not capture a file that fails the absolute
+    gate: losing runs cannot become the new normal."""
+    losing = [(f"{SPEEDUP_FAMILY}-0.54x", 0.0, 0.54)]
+    name = "BENCH_gemm_tuning__cpu-interpret.json"
+    bdir = tmp_path / "baselines"
+    proc = _run_compare(tmp_path, losing, losing,
+                        extra_args=["--require-improvement", SPEEDUP_FAMILY,
+                                    "--write-baseline"])
+    # _run_compare pre-writes the baseline file; blessing would REWRITE it
+    # with the fresh (losing) rows — verify it still holds the old blob
+    assert proc.returncode == 1, proc.stdout
+    assert "refusing to bless" in proc.stdout
+    base = json.loads((bdir / name).read_text())
+    assert base["rows"][0]["derived"] == 0.54   # pre-written, not re-blessed
+    assert "tolerances" not in base             # bless would have added them
 
 
 def test_committed_bench_baselines_exist():

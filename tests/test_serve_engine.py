@@ -313,3 +313,50 @@ def test_varied_max_new_shares_one_decode_compile():
     a = eng.generate(RAGGED, 5)
     b = eng.generate(RAGGED, 6)     # same bucket (8) as 5
     assert [x[:5] for x in b] == a  # shared prefix: bucketing is invisible
+
+
+def test_decode_unroll_config_and_heuristic_provenance():
+    """ServeConfig.decode_unroll is the top of the resolution order; with no
+    config and no tuned entry, a single-device engine falls back to the
+    u1 heuristic.  Both value and provenance surface in stats()."""
+    cfg, model, params, eng = _build(decode_unroll=2)
+    out_u2 = eng.generate(RAGGED, 5)
+    st = eng.stats()
+    assert st["decode_unroll"] == 2
+    assert st["decode_unroll_source"] == "config"
+    _, _, _, eng_h = _build()
+    out_u1 = eng_h.generate(RAGGED, 5)
+    st = eng_h.stats()
+    assert st["decode_unroll"] == 1
+    assert st["decode_unroll_source"] == "heuristic"
+    # the unroll changes the loop schedule, never the tokens
+    assert out_u2 == out_u1
+
+
+def test_decode_unroll_tuned_entry_resolves_and_keeps_parity():
+    """A decode_loop entry in the registry (shape = (max_batch, max_len))
+    must win over the heuristic, report tuned provenance, and decode the
+    same tokens as an unrolled=1 engine."""
+    from repro.core import (GLOBAL_REGISTRY, OP_DECODE_LOOP, DecodeLoopConfig)
+    import jax.numpy as _jnp
+    cfg, model, params, _ = _build()
+    dt = _jnp.dtype(cfg.dtype).name
+    GLOBAL_REGISTRY.put_op(OP_DECODE_LOOP, DecodeLoopConfig(2),
+                           "cpu-interpret", cfg.dtype, (3, 64))
+    try:
+        eng = Engine(model, params,
+                     ServeConfig(max_batch=3, max_len=64,
+                                 hardware="cpu-interpret"))
+        out = eng.generate(RAGGED, 5)
+        st = eng.stats()
+        assert st["decode_unroll"] == 2
+        assert st["decode_unroll_source"] == "tuned:exact"
+        ref = Engine(model, params,
+                     ServeConfig(max_batch=3, max_len=64, decode_unroll=1,
+                                 hardware="cpu-interpret"))
+        assert out == ref.generate(RAGGED, 5)
+    finally:
+        # drop the entry: provenance assertions elsewhere expect a clean
+        # registry (nearest-tier would otherwise satisfy nearby shapes)
+        GLOBAL_REGISTRY._exact.pop((OP_DECODE_LOOP, "cpu-interpret", dt),
+                                   None)

@@ -453,3 +453,91 @@ def test_sweep_cli_flash_op_writes_op_keyed_entries(tmp_path):
     rec = db.get_op(OP_FLASH_ATTENTION, "bfloat16", (512, 512, 64))
     assert rec is not None
     assert isinstance(rec.config, FlashAttentionConfig)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-keyed entries (schema v4: topology in the op key)
+# ---------------------------------------------------------------------------
+
+def test_mesh_keyed_db_roundtrip_and_registry_delivery(tmp_path):
+    """A decode_loop record tuned for data=4,model=2 must persist with its
+    topology label, coexist with the topology-agnostic record of the SAME
+    (op, dtype, shape), and land in the registry's <hardware>@<mesh> bucket
+    so only lookups under that mesh see it."""
+    from repro.core import OP_DECODE_LOOP, DecodeLoopConfig
+    db = TuningDB("cpu-interpret")
+    db.add(TuningRecord(op=OP_DECODE_LOOP, dtype="bfloat16",
+                        shape=(8, 256), block=(4,), mesh="data4xmodel2",
+                        source="measure", seconds=1e-3))
+    db.add(TuningRecord(op=OP_DECODE_LOOP, dtype="bfloat16",
+                        shape=(8, 256), block=(1,),
+                        source="measure", seconds=2e-3))
+    assert len(db) == 2                      # mesh is part of the record key
+    path = str(tmp_path / "cpu-interpret.json")
+    db.save(path)
+    db2 = TuningDB.from_file(path)
+    rec = db2.get_op(OP_DECODE_LOOP, "bfloat16", (8, 256),
+                     mesh="data4xmodel2")
+    assert rec.mesh == "data4xmodel2"
+    assert rec.config == DecodeLoopConfig(4)
+    assert db2.get_op(OP_DECODE_LOOP, "bfloat16", (8, 256)).mesh is None
+
+    reg = TileRegistry()
+    assert tdb.load_into_registry(reg, path) == 2
+    on_mesh = reg.lookup_op(OP_DECODE_LOOP, "cpu-interpret", jnp.bfloat16,
+                            (8, 256), mesh="data4xmodel2")
+    assert on_mesh.source == "exact"
+    assert on_mesh.mesh == "data4xmodel2"
+    assert on_mesh.config == DecodeLoopConfig(4)
+    alone = reg.lookup_op(OP_DECODE_LOOP, "cpu-interpret", jnp.bfloat16,
+                          (8, 256))
+    assert alone.source == "exact"
+    assert alone.mesh is None
+    assert alone.config == DecodeLoopConfig(1)
+
+
+def test_mesh_bucket_outranks_plain_and_falls_back(tmp_path):
+    """Lookup order: the mesh bucket's exact/nearest tiers beat every
+    plain-hardware tier; an unknown topology falls straight through to the
+    topology-agnostic entry."""
+    from repro.core import OP_DECODE_LOOP, DecodeLoopConfig
+    reg = TileRegistry()
+    reg.put_op(OP_DECODE_LOOP, DecodeLoopConfig(2), "cpu-interpret",
+               jnp.bfloat16, (8, 256))
+    reg.put_op(OP_DECODE_LOOP, DecodeLoopConfig(8), "cpu-interpret",
+               jnp.bfloat16, (8, 512), mesh="data4xmodel2")
+    # nearest within the mesh bucket outranks exact in the plain bucket
+    res = reg.lookup_op(OP_DECODE_LOOP, "cpu-interpret", jnp.bfloat16,
+                        (8, 256), mesh="data4xmodel2")
+    assert res.source == "nearest"
+    assert res.config == DecodeLoopConfig(8)
+    # a topology with no tuned entries falls back to the plain bucket
+    res = reg.lookup_op(OP_DECODE_LOOP, "cpu-interpret", jnp.bfloat16,
+                        (8, 256), mesh="data2xmodel4")
+    assert res.source == "exact"
+    assert res.config == DecodeLoopConfig(2)
+    # alias canonicalization applies inside the mesh key too
+    reg.put_op(OP_DECODE_LOOP, DecodeLoopConfig(4), "host-cpu",
+               jnp.bfloat16, (8, 256), mesh="data2xmodel1")
+    res = reg.lookup_op(OP_DECODE_LOOP, "cpu-interpret", jnp.bfloat16,
+                        (8, 256), mesh="data2xmodel1")
+    assert res.source == "exact"
+    assert res.config == DecodeLoopConfig(4)
+
+
+def test_legacy_v3_db_still_loads(tmp_path):
+    """v1/2/3 files (no mesh field) must keep loading as topology-agnostic
+    records — blessing v4 does not orphan committed tuned tables."""
+    path = str(tmp_path / "cpu-interpret.json")
+    blob = {"schema_version": 3, "hardware": "cpu-interpret",
+            "entries": [{"op": "gemm", "dtype": "bfloat16",
+                         "shape": [64, 64, 64], "block": [32, 32, 32],
+                         "source": "model", "seconds": 1e-4, "gflops": 1.0}]}
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    db = TuningDB.from_file(path)
+    rec = db.get("bfloat16", 64, 64, 64)
+    assert rec is not None and rec.mesh is None
+    # and re-saves as v4
+    db.save(path)
+    assert json.load(open(path))["schema_version"] == tdb.SCHEMA_VERSION
