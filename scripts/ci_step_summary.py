@@ -32,6 +32,27 @@ def _bench_md(path: str, blob: dict) -> list:
     return lines + [""]
 
 
+def _findings_md(path: str, blob: dict) -> list:
+    """analysis-findings.json from ``scripts/analyze.py --json``."""
+    title = os.path.basename(path)
+    errors, warnings = blob.get("errors", 0), blob.get("warnings", 0)
+    lines = [f"### `{title}` — {errors} error(s), {warnings} warning(s)"
+             + (f", {blob['traced_functions']} traced function(s)"
+                if "traced_functions" in blob else ""), ""]
+    findings = blob.get("findings", [])
+    if not findings:
+        return lines + ["no findings — every invariant holds", ""]
+    lines += ["| check | severity | location | scope | message |",
+              "| --- | --- | --- | --- | --- |"]
+    for f in findings:
+        loc = f"{f.get('path', '?')}:{f['line']}" if f.get("line") \
+            else f.get("path", "?")
+        lines.append(f"| {f.get('check_id', '?')} | {f.get('severity', '?')} "
+                     f"| `{loc}` | `{f.get('scope', '')}` "
+                     f"| {f.get('message', '')} |")
+    return lines + [""]
+
+
 def _profile_md(path: str, blob: dict) -> list:
     title = os.path.basename(path)
     lines = [f"### `{title}` — kind `{blob.get('kind', '?')}`, hardware "
@@ -68,13 +89,16 @@ def main(argv=None) -> int:
         try:
             with open(path) as f:
                 blob = json.load(f)
-            if "rows" in blob:
+            if "findings" in blob:
+                lines = _findings_md(path, blob)
+            elif "rows" in blob:
                 lines = _bench_md(path, blob)
             elif "families" in blob:
                 lines = _profile_md(path, blob)
             else:
                 lines = [f"### `{os.path.basename(path)}`", "",
-                         "unrecognized artifact shape (no rows/families)", ""]
+                         "unrecognized artifact shape "
+                         "(no findings/rows/families)", ""]
         except Exception as e:
             lines = [f"### `{os.path.basename(path)}`", "",
                      f"unreadable: {type(e).__name__}: {e}", ""]

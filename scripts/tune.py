@@ -7,6 +7,8 @@
     python scripts/tune.py sweep  --mode measure            # hardware auto-detected
     python scripts/tune.py show   --hardware tpu-v5e
     python scripts/tune.py diff   --hardware tpu-v5e
+    python scripts/tune.py verify                    # all DBs, all AR checks
+    python scripts/tune.py verify --hardware tpu-v5e --prune
     python scripts/tune.py export --hardware cpu-interpret --format markdown
 
 ``--hardware`` names a registered profile (``tpu-v5e``, ``gpu-generic``,
@@ -196,6 +198,57 @@ def cmd_diff(args) -> int:
     return 1 if changed and args.check else 0
 
 
+def cmd_verify(args) -> int:
+    """Validate tuned DBs with the static artifact checks (AR00x) and
+    report — or with ``--prune``, rewrite without — stale entries."""
+    from repro.analysis.artifacts import partition_stale, validate_tuning_db
+    from repro.analysis.findings import SEV_ERROR
+
+    if args.hardware:
+        _resolve_hw(args)
+        paths = [_db_path(args)]
+        if not os.path.exists(paths[0]):
+            raise SystemExit(f"error: no tuning DB at {paths[0]}")
+    else:
+        d = args.db_dir or tuning_db.default_tuned_dir()
+        paths = sorted(
+            os.path.join(d, f) for f in os.listdir(d)
+            if f.endswith(".json")) if os.path.isdir(d) else []
+        if not paths:
+            print(f"[verify] no tuned DBs under {d}")
+            return 0
+
+    exit_code = 0
+    for path in paths:
+        findings = validate_tuning_db(path)
+        errors = [f for f in findings if f.severity == SEV_ERROR]
+        warns = [f for f in findings if f.severity != SEV_ERROR]
+        for f in findings:
+            print(f.render())
+        db = None
+        stale = []
+        if not any(f.check_id == "AR005" for f in errors):
+            db = tuning_db.TuningDB.from_file(path)
+            live, stale = partition_stale(db)
+        print(f"[verify] {path}: {len(errors)} error(s), "
+              f"{len(warns)} warning(s), {len(stale)} stale "
+              f"entr{'y' if len(stale) == 1 else 'ies'}")
+        if errors:
+            exit_code = 1
+        if stale and args.prune and db is not None:
+            pruned = tuning_db.TuningDB(db.hardware)
+            for rec in live:
+                pruned.add(rec, keep_best=False)
+            pruned.save(path)
+            print(f"[verify] pruned {len(stale)} stale entries -> {path} "
+                  f"({len(pruned)} kept)")
+        elif stale and not args.prune:
+            print("[verify] re-run with --prune to drop them")
+            if args.check_stale:
+                exit_code = 1
+    return exit_code
+
+
 def cmd_export(args) -> int:
     db = _load_db(args)
     if args.format == "markdown":
@@ -255,6 +308,16 @@ def main(argv=None) -> int:
     p.add_argument("--check", action="store_true",
                    help="exit nonzero when winners changed (CI drift gate)")
     p.set_defaults(fn=cmd_diff)
+
+    p = sub.add_parser("verify",
+                       help="validate tuned DBs against their hardware "
+                            "profiles; --prune drops stale entries")
+    common(p)
+    p.add_argument("--prune", action="store_true",
+                   help="rewrite the DB without stale entries")
+    p.add_argument("--check-stale", action="store_true",
+                   help="exit nonzero when stale entries exist (CI gate)")
+    p.set_defaults(fn=cmd_verify)
 
     p = sub.add_parser("export", help="export the DB (markdown/json)")
     common(p)

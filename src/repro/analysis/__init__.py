@@ -1,0 +1,36 @@
+"""Static invariant checking for the single-source, many-target thesis.
+
+The paper's portability claim only holds while the code keeps its
+invariants — no hidden host round-trips inside traced regions, tile
+configs legal for every profile they're committed for, every param leaf
+covered by a sharding rule.  This package checks those *statically*
+(stdlib ``ast`` + artifact re-validation, no accelerator needed) so CI
+catches rot before a benchmark has to:
+
+* :mod:`~repro.analysis.callgraph` — module index + the traced-region
+  call graph (what is reachable from ``jax.jit``/``pallas_call``/
+  ``lax.*`` bodies);
+* :mod:`~repro.analysis.purity`   — TP00x trace-purity lint over that
+  graph (host syncs, coercions, traced control flow, nondeterminism,
+  missing ``profiling.annotate`` scopes);
+* :mod:`~repro.analysis.artifacts` — AR00x/BA00x validation of
+  ``tuned/*.json`` against their ``HardwareProfile`` and of
+  ``benchmarks/baselines/BENCH_*.json`` schemas;
+* :mod:`~repro.analysis.coverage` — SH00x sharding-rule coverage of all
+  model families' abstract param trees;
+* :mod:`~repro.analysis.findings` — the :class:`Finding` record and the
+  committed-baseline ratchet (``tests/analysis_baseline.json``).
+
+Entry point: ``scripts/analyze.py`` (``lint | artifacts | coverage |
+report``); catalog and workflow: ``docs/STATIC_ANALYSIS.md``.
+"""
+from repro.analysis.findings import (BASELINE_SCHEMA_VERSION, Finding,
+                                     SEV_ERROR, SEV_WARNING,
+                                     default_baseline_path, load_baseline,
+                                     ratchet, save_baseline, sort_findings)
+
+__all__ = [
+    "BASELINE_SCHEMA_VERSION", "Finding", "SEV_ERROR", "SEV_WARNING",
+    "default_baseline_path", "load_baseline", "ratchet", "save_baseline",
+    "sort_findings",
+]

@@ -1,0 +1,319 @@
+"""Artifact validators: the AR00x (tuned DBs) and BA00x (bench baselines)
+check families.
+
+Committed artifacts are the paper's "Tab. 4 outside the kernel" made
+durable — and durable artifacts rot silently: a profile's VMEM budget
+shrinks, a bucketer changes its power-of-two policy, a mesh axis is
+renamed, and the stale entry keeps winning lookups.  These checks re-derive
+every entry's legality from the *current* ``HardwareProfile`` and current
+tuning-space policy, so rot is a CI failure instead of a perf mystery.
+
+==========  =========  =====================================================
+check id    severity   fires on
+==========  =========  =====================================================
+``AR001``   error      tuned block misaligned for its profile
+                       (``TileConfig.aligned`` / ``FlashAttentionConfig
+                       .aligned`` against ``mxu_dim``/``sublane``)
+``AR002``   error      tuned block's double-buffered working set exceeds
+                       the profile's VMEM budget (``.fits``)
+``AR003``   error      entry ``mesh`` label unparseable or using axes
+                       outside ``launch.mesh.MESH_AXES``
+``AR004``   warning    stale entry: bucketed dims no longer power-of-two,
+                       unroll outside the decode tuning space, or a dtype
+                       jnp cannot resolve — prunable via
+                       ``scripts/tune.py verify --prune``
+``AR005``   error      DB file name resolves to no registered
+                       ``HardwareProfile`` (or the file is unloadable)
+``BA001``   error      bench baseline missing/ill-typed ``rows`` /
+                       ``name`` / ``us_per_call`` fields
+``BA002``   warning    a row with zero ``us_per_call`` and no ``derived``
+                       value — the PR 5 zero-baseline rule (warn, stay
+                       neutral in the trend gate)
+``BA003``   error      ``BENCH_<suite>__<hw>[-mesh].json`` filename whose
+                       ``<hw>`` disagrees with the blob's ``hardware`` or
+                       resolves to no profile
+==========  =========  =====================================================
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding, SEV_ERROR, SEV_WARNING
+from repro.core.hardware import find_profile
+from repro.core.registry import (OP_DECODE_LOOP, OP_FLASH_ATTENTION,
+                                 OP_GEMM)
+from repro.core.tile_config import DecodeLoopTuningSpace
+from repro.core.tuning_db import TuningDB, TuningDBError
+from repro.launch.mesh import MESH_AXES
+
+SLUGS = {
+    "AR001": "tile-misaligned",
+    "AR002": "vmem-overflow",
+    "AR003": "bad-mesh-label",
+    "AR004": "stale-entry",
+    "AR005": "unknown-hardware",
+    "BA001": "bench-schema",
+    "BA002": "zero-baseline",
+    "BA003": "bench-name-mismatch",
+}
+
+_MESH_LABEL_RE = re.compile(r"^([a-z]+\d+)(x[a-z]+\d+)*$")
+# non-greedy axis name + trailing separator, or "xmodel2" would parse as
+# one segment with an "xmodel" axis
+_MESH_SEGMENT_RE = re.compile(r"([a-z]+?)(\d+)(?:x|$)")
+_BENCH_NAME_RE = re.compile(r"^BENCH_(?P<suite>[a-z0-9_]+)__"
+                            r"(?P<hw>[a-z0-9-]+?)(?P<mesh>-mesh)?\.json$")
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def _entry_label(rec) -> str:
+    shape = "x".join(str(s) for s in rec.shape)
+    label = f"{rec.op}/{rec.dtype}/{shape}"
+    if rec.mesh:
+        label += f"@{rec.mesh}"
+    return label
+
+
+def parse_mesh_label(label: str) -> Optional[List[Tuple[str, int]]]:
+    """``"data4xmodel2"`` -> ``[("data", 4), ("model", 2)]``; None if the
+    label is not of that shape at all."""
+    if not _MESH_LABEL_RE.match(label or ""):
+        return None
+    return [(axis, int(size))
+            for axis, size in _MESH_SEGMENT_RE.findall(label)]
+
+
+def validate_tuning_db(path: str, rel: Optional[str] = None
+                       ) -> List[Finding]:
+    """AR00x checks for one ``tuned/<hardware>.json`` file."""
+    rel = rel or path
+    findings: List[Finding] = []
+
+    def flag(check_id, severity, scope, message):
+        findings.append(Finding(check_id=check_id, severity=severity,
+                                path=rel, line=0, scope=scope,
+                                message=message))
+
+    try:
+        db = TuningDB.from_file(path)
+    except (TuningDBError, OSError) as e:
+        flag("AR005", SEV_ERROR, "db", f"unloadable tuning DB: {e}")
+        return findings
+
+    hw = find_profile(db.hardware)
+    if hw is None:
+        flag("AR005", SEV_ERROR, "db",
+             f"hardware {db.hardware!r} matches no registered "
+             f"HardwareProfile — tuned entries can never be looked up")
+        return findings
+    stem = os.path.splitext(os.path.basename(path))[0]
+    if find_profile(stem) is not hw:
+        flag("AR005", SEV_ERROR, "db",
+             f"file stem {stem!r} does not resolve to the blob's "
+             f"hardware {db.hardware!r}")
+
+    for rec in db.records():
+        scope = _entry_label(rec)
+
+        try:
+            jnp.dtype(rec.dtype)
+            dtype_ok = True
+        except TypeError:
+            dtype_ok = False
+            flag("AR004", SEV_WARNING, scope,
+                 f"dtype {rec.dtype!r} is not a resolvable jnp dtype — "
+                 f"stale entry, prune with `tune.py verify --prune`")
+
+        if rec.op == OP_GEMM and dtype_ok:
+            cfg = rec.config
+            if not cfg.aligned(hw, rec.dtype):
+                flag("AR001", SEV_ERROR, scope,
+                     f"block {cfg.label} misaligned for {hw.name} "
+                     f"(mxu_dim={hw.mxu_dim}, sublane={hw.sublane}, "
+                     f"dtype={rec.dtype})")
+            if not cfg.fits(hw, rec.dtype):
+                flag("AR002", SEV_ERROR, scope,
+                     f"block {cfg.label} double-buffered working set "
+                     f"exceeds {hw.name} VMEM ({hw.vmem_bytes} B)")
+        elif rec.op == OP_FLASH_ATTENTION and dtype_ok:
+            cfg = rec.config
+            d = rec.shape[2]
+            if not cfg.aligned(hw, rec.dtype):
+                flag("AR001", SEV_ERROR, scope,
+                     f"flash block {cfg.label} misaligned for {hw.name} "
+                     f"(mxu_dim={hw.mxu_dim}, sublane={hw.sublane}, "
+                     f"dtype={rec.dtype})")
+            if not cfg.fits(hw, d, rec.dtype):
+                flag("AR002", SEV_ERROR, scope,
+                     f"flash block {cfg.label} working set exceeds "
+                     f"{hw.name} VMEM at head dim {d}")
+            if not (_is_pow2(rec.shape[0]) and _is_pow2(rec.shape[1])):
+                flag("AR004", SEV_WARNING, scope,
+                     f"sequence shape {rec.shape[:2]} is not the "
+                     f"power-of-two the attention bucketer produces — "
+                     f"stale key, never hit by a lookup")
+        elif rec.op == OP_DECODE_LOOP:
+            unroll = rec.block[0]
+            space = tuple(DecodeLoopTuningSpace().unroll_candidates)
+            if unroll not in space:
+                flag("AR004", SEV_WARNING, scope,
+                     f"unroll {unroll} outside the decode tuning space "
+                     f"{space} — stale entry")
+            if not all(_is_pow2(x) for x in rec.shape):
+                flag("AR004", SEV_WARNING, scope,
+                     f"decode shape {rec.shape} is not power-of-two "
+                     f"bucketed — stale key, never hit by a lookup")
+
+        if rec.mesh is not None:
+            segs = parse_mesh_label(rec.mesh)
+            if segs is None:
+                flag("AR003", SEV_ERROR, scope,
+                     f"mesh label {rec.mesh!r} is not of the "
+                     f"`axis<N>[xaxis<N>...]` form mesh_axis_label emits")
+            else:
+                bad = [a for a, _n in segs if a not in MESH_AXES]
+                if bad:
+                    flag("AR003", SEV_ERROR, scope,
+                         f"mesh label {rec.mesh!r} uses axes {bad} "
+                         f"outside MESH_AXES {MESH_AXES} — orphaned by "
+                         f"every topology the launcher can build")
+                elif any(n < 1 for _a, n in segs):
+                    flag("AR003", SEV_ERROR, scope,
+                         f"mesh label {rec.mesh!r} has a non-positive "
+                         f"axis size")
+    return findings
+
+
+def validate_tuned_dir(tuned_dir: str, root: Optional[str] = None
+                       ) -> List[Finding]:
+    findings: List[Finding] = []
+    if not os.path.isdir(tuned_dir):
+        return findings
+    for name in sorted(os.listdir(tuned_dir)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(tuned_dir, name)
+        rel = os.path.relpath(path, root) if root else path
+        findings.extend(validate_tuning_db(path, rel))
+    return findings
+
+
+def validate_bench_baseline(path: str, rel: Optional[str] = None
+                            ) -> List[Finding]:
+    """BA00x checks for one ``benchmarks/baselines/BENCH_*.json``."""
+    rel = rel or path
+    findings: List[Finding] = []
+
+    def flag(check_id, severity, scope, message):
+        findings.append(Finding(check_id=check_id, severity=severity,
+                                path=rel, line=0, scope=scope,
+                                message=message))
+
+    fname = os.path.basename(path)
+    m = _BENCH_NAME_RE.match(fname)
+    if m is None:
+        flag("BA003", SEV_ERROR, "file",
+             f"{fname!r} does not match BENCH_<suite>__<hw>[-mesh].json")
+        return findings
+
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        flag("BA001", SEV_ERROR, "file", f"unreadable baseline: {e}")
+        return findings
+
+    rows = blob.get("rows")
+    if not isinstance(rows, list) or not rows:
+        flag("BA001", SEV_ERROR, "rows",
+             "baseline has no `rows` list — nothing for the trend gate "
+             "to compare")
+        return findings
+
+    hw_name = m.group("hw")
+    if find_profile(hw_name) is None:
+        flag("BA003", SEV_ERROR, "file",
+             f"filename hardware {hw_name!r} matches no registered "
+             f"HardwareProfile")
+    blob_hw = blob.get("hardware")
+    if blob_hw is not None and find_profile(blob_hw) is not find_profile(
+            hw_name):
+        flag("BA003", SEV_ERROR, "file",
+             f"blob hardware {blob_hw!r} != filename hardware {hw_name!r}")
+    if m.group("mesh") and not blob.get("mesh"):
+        flag("BA003", SEV_ERROR, "file",
+             "-mesh filename but the blob records no mesh spec")
+
+    seen = set()
+    for i, row in enumerate(rows):
+        name = row.get("name") if isinstance(row, dict) else None
+        scope = name or f"rows[{i}]"
+        if not isinstance(row, dict) or not isinstance(name, str):
+            flag("BA001", SEV_ERROR, scope,
+                 f"row {i} is not an object with a string `name`")
+            continue
+        if name in seen:
+            flag("BA001", SEV_ERROR, scope,
+                 "duplicate row name — trend comparison is ambiguous")
+        seen.add(name)
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or us < 0:
+            flag("BA001", SEV_ERROR, scope,
+                 f"`us_per_call` must be a non-negative number, "
+                 f"got {us!r}")
+            continue
+        if us == 0 and not row.get("derived"):
+            # PR 5 zero-baseline rule: warn + neutral, never a ratio of 0
+            flag("BA002", SEV_WARNING, scope,
+                 "zero us_per_call with no derived value — the trend "
+                 "gate treats this row as neutral; re-bless with a real "
+                 "measurement")
+    return findings
+
+
+def validate_baselines_dir(baselines_dir: str, root: Optional[str] = None
+                           ) -> List[Finding]:
+    findings: List[Finding] = []
+    if not os.path.isdir(baselines_dir):
+        return findings
+    for name in sorted(os.listdir(baselines_dir)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(baselines_dir, name)
+        rel = os.path.relpath(path, root) if root else path
+        findings.extend(validate_bench_baseline(path, rel))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Staleness partition for `tune.py verify --prune`
+# ---------------------------------------------------------------------------
+
+def partition_stale(db: TuningDB) -> Tuple[List, List]:
+    """Split a DB's records into (live, stale) by the AR004 policy — the
+    prunable set `tune.py verify --prune` rewrites the file without."""
+    live, stale = [], []
+    decode_space = tuple(DecodeLoopTuningSpace().unroll_candidates)
+    for rec in db.records():
+        bad = False
+        try:
+            jnp.dtype(rec.dtype)
+        except TypeError:
+            bad = True
+        if rec.op == OP_FLASH_ATTENTION and not (
+                _is_pow2(rec.shape[0]) and _is_pow2(rec.shape[1])):
+            bad = True
+        if rec.op == OP_DECODE_LOOP and (
+                rec.block[0] not in decode_space
+                or not all(_is_pow2(x) for x in rec.shape)):
+            bad = True
+        (stale if bad else live).append(rec)
+    return live, stale

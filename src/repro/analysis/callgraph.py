@@ -1,0 +1,382 @@
+"""AST module index + traced-region call graph over ``src/repro``.
+
+The trace-purity lint needs to know *which* functions execute under a JAX
+trace: host syncs are fine in driver code (that is where the sanctioned
+once-per-wave ``device_get`` lives) and fatal inside anything reachable
+from a ``jax.jit`` / ``pallas_call`` / ``lax.while_loop`` / ``lax.scan``
+body.  This module builds that set statically:
+
+1. **Index** every function (including nested defs and lambdas) in every
+   module under ``src/repro``, keyed by simple name and by qualname.
+2. **Roots**: find call sites of the tracing wrappers (``jax.jit``,
+   ``pallas_call``, ``lax.{while_loop,scan,cond,fori_loop,map}``,
+   ``vmap``/``pmap``, ``checkpoint``/``remat``, ``grad``/
+   ``value_and_grad``, ``shard_map``) and resolve their function-valued
+   arguments.  Resolution follows local ``name = factory(...)``
+   assignments into the factory's nested defs (the ``step =
+   make_train_step(...); jax.jit(step)`` idiom) and unwraps adapter calls
+   like ``self._with_mesh(loop)`` down to their function arguments.
+3. **Reachability**: BFS over call edges.  Bare and attribute callee
+   names resolve against the index; attribute calls whose base is an
+   external module alias (``jnp``, ``np``, ``os``, ...) and generic
+   container-method names (``.get``, ``.update``, ...) are excluded so
+   stdlib lookalikes don't drag host code into the traced set.
+
+This over-approximates (a helper called both from host and traced code is
+traced) — exactly the conservatism a purity lint wants.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# wrapper callables whose function-valued arguments start a traced region
+TRACING_WRAPPERS = {
+    "jit", "pallas_call", "while_loop", "scan", "cond", "fori_loop",
+    "map", "vmap", "pmap", "checkpoint", "remat", "grad",
+    "value_and_grad", "shard_map", "eval_shape", "custom_vjp",
+}
+# "map"/"cond" are only tracing wrappers when called off jax/lax — a bare
+# builtin map() call must not seed the traced set.
+_NEEDS_JAX_BASE = {"map", "cond", "eval_shape"}
+
+# which positional args of each wrapper are function-valued — the rest are
+# data (a scan's carry/xs, a fori_loop's bounds) and must not be resolved,
+# or a data variable that shares a function's name would seed the traced set
+_FN_ARG_INDICES = {
+    "jit": (0,), "vmap": (0,), "pmap": (0,), "grad": (0,),
+    "value_and_grad": (0,), "checkpoint": (0,), "remat": (0,),
+    "eval_shape": (0,), "custom_vjp": (0,), "pallas_call": (0,),
+    "shard_map": (0,), "while_loop": (0, 1), "scan": (0,),
+    "cond": (1, 2, 3), "fori_loop": (2,), "map": (0,),
+}
+# keyword names that carry the function across all wrappers
+_FN_KEYWORDS = {"f", "fun", "body_fun", "cond_fun", "kernel", "body"}
+
+# attribute-call names too generic to resolve against the index when the
+# receiver is not `self` — stdlib/container lookalikes, jnp Array methods
+GENERIC_METHOD_NAMES = {
+    "get", "add", "update", "items", "keys", "values", "append", "extend",
+    "pop", "popleft", "copy", "clear", "join", "split", "strip", "format",
+    "read", "write", "close", "open", "mean", "sum", "max", "min", "all",
+    "any", "astype", "reshape", "transpose", "at", "set", "dot", "sort",
+    "count", "index", "insert", "remove", "save", "load", "render",
+    "startswith", "endswith", "replace", "lower", "upper", "setdefault",
+    "todo", "put", "run", "result",
+}
+
+
+# calls that take a function argument and invoke it under the caller's
+# trace context — their Name/Lambda args become traced too
+_HIGHER_ORDER_TAILS = {
+    "tree_map", "tree_map_with_path", "partial", "map", "filter", "sorted",
+    "reduce", "apply", "switch",
+}
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function (or lambda) definition found in the scanned tree."""
+    path: str                 # repo-relative module path
+    qualname: str             # e.g. "Engine._build_loop.<locals>.loop"
+    name: str                 # simple name ("loop"; "<lambda>")
+    node: ast.AST             # FunctionDef | AsyncFunctionDef | Lambda
+    lineno: int
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}:{self.qualname}"
+
+
+class ModuleInfo:
+    """Per-module artifacts the indexer keeps around for resolution."""
+
+    def __init__(self, path: str, tree: ast.Module, source: str):
+        self.path = path
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.functions: List[FunctionInfo] = []
+        # local alias -> fully dotted module/name it was imported as
+        self.imports: Dict[str, str] = {}
+        # simple local/global name -> Call node it was assigned from
+        self.assigned_calls: Dict[str, ast.Call] = {}
+
+
+def _body_without_nested(fn_node: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body, not descending into nested function defs or
+    lambdas (those are indexed and analyzed as their own scopes)."""
+    if isinstance(fn_node, ast.Lambda):
+        stack: List[ast.AST] = [fn_node.body]
+    else:
+        stack = list(fn_node.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.lax.scan`` -> "jax.lax.scan"; None for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Indexer(ast.NodeVisitor):
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.scope: List[str] = []
+
+    def _register(self, name: str, node: ast.AST):
+        qual = ".".join(self.scope + [name]) if self.scope else name
+        self.mod.functions.append(
+            FunctionInfo(self.mod.path, qual, name, node, node.lineno))
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self.mod.imports[a.asname or a.name.split(".")[0]] = a.name
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        base = node.module or ""
+        for a in node.names:
+            self.mod.imports[a.asname or a.name] = f"{base}.{a.name}"
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    def _visit_fn(self, node):
+        self._register(node.name, node)
+        self.scope.extend([node.name, "<locals>"])
+        self.generic_visit(node)
+        self.scope.pop()
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Lambda(self, node: ast.Lambda):
+        self._register("<lambda>", node)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        if isinstance(node.value, ast.Call):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.mod.assigned_calls[tgt.id] = node.value
+        self.generic_visit(node)
+
+
+class CallGraph:
+    """Index of every function under a source root + the traced subset."""
+
+    def __init__(self, root: str, package_dir: str = "src/repro"):
+        self.root = os.path.abspath(root)
+        self.package_dir = package_dir
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.by_name: Dict[str, List[FunctionInfo]] = {}
+        self.by_key: Dict[str, FunctionInfo] = {}
+        self._scan()
+        self.traced: Dict[str, FunctionInfo] = {}
+        self.traced_via: Dict[str, str] = {}   # key -> why it is traced
+        self._mark_traced()
+
+    # -- indexing ----------------------------------------------------------
+
+    def _scan(self):
+        pkg = os.path.join(self.root, self.package_dir)
+        for dirpath, _dirnames, filenames in os.walk(pkg):
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                rel = os.path.relpath(full, self.root)
+                with open(full) as f:
+                    source = f.read()
+                mod = ModuleInfo(rel, ast.parse(source, filename=rel), source)
+                _Indexer(mod).visit(mod.tree)
+                self.modules[rel] = mod
+                for info in mod.functions:
+                    self.by_name.setdefault(info.name, []).append(info)
+                    self.by_key[info.key] = info
+
+    # -- alias / external classification -----------------------------------
+
+    def _is_external_base(self, mod: ModuleInfo, base: str) -> bool:
+        """True when `base.attr(...)`'s base names a non-repro module."""
+        target = mod.imports.get(base)
+        if target is None:
+            return False
+        return not target.split(".")[0] == "repro"
+
+    def _is_jaxish_base(self, mod: ModuleInfo, base: str) -> bool:
+        target = mod.imports.get(base, base)
+        head = target.split(".")[0]
+        return head in {"jax", "pl", "pltpu", "plgpu"} or ".lax" in target \
+            or target in {"lax", "jax.lax"}
+
+    # -- traced-root discovery ---------------------------------------------
+
+    def _wrapper_name(self, mod: ModuleInfo, call: ast.Call) -> Optional[str]:
+        dn = dotted_name(call.func)
+        if dn is None:
+            return None
+        tail = dn.split(".")[-1]
+        if tail not in TRACING_WRAPPERS:
+            return None
+        if tail in _NEEDS_JAX_BASE:
+            base = dn.split(".")[0]
+            if "." not in dn or not self._is_jaxish_base(mod, base):
+                return None
+        # a bare name must itself be imported from jax-land (e.g.
+        # `from jax import jit`); repo-local helpers named `scan` don't count
+        if "." not in dn:
+            target = mod.imports.get(dn, "")
+            if not (target.startswith("jax") or "pallas" in target):
+                return None
+        return tail
+
+    def _resolve_fn_expr(self, mod: ModuleInfo, expr: ast.AST,
+                         depth: int = 0) -> List[FunctionInfo]:
+        """Resolve a function-valued expression to candidate definitions."""
+        if depth > 4:
+            return []
+        if isinstance(expr, ast.Lambda):
+            for info in self.modules[mod.path].functions:
+                if info.node is expr:
+                    return [info]
+            return []
+        if isinstance(expr, ast.Call):
+            # adapter idiom: self._with_mesh(loop), functools.partial(fn, x)
+            out: List[FunctionInfo] = []
+            for arg in list(expr.args) + [k.value for k in expr.keywords]:
+                out.extend(self._resolve_fn_expr(mod, arg, depth + 1))
+            # factory idiom: jax.jit(make_train_step(...)) — the traced code
+            # is the factory's nested defs
+            dn = dotted_name(expr.func)
+            if dn is not None:
+                for target in self._resolve_name(mod, dn.split(".")[-1],
+                                                 prefer_module=True):
+                    out.extend(self._nested_of(target))
+            return out
+        if isinstance(expr, ast.Name):
+            # local `step = make_train_step(...)` then `jax.jit(step)`
+            assigned = mod.assigned_calls.get(expr.id)
+            if assigned is not None:
+                got = self._resolve_fn_expr(mod, assigned, depth + 1)
+                if got:
+                    return got
+            return self._resolve_name(mod, expr.id, prefer_module=True)
+        if isinstance(expr, ast.Attribute):
+            base = dotted_name(expr.value)
+            if base and self._is_external_base(mod, base.split(".")[0]):
+                return []
+            return self._resolve_name(mod, expr.attr, prefer_module=False)
+        return []
+
+    def _resolve_name(self, mod: ModuleInfo, name: str,
+                      prefer_module: bool) -> List[FunctionInfo]:
+        candidates = self.by_name.get(name, [])
+        if prefer_module:
+            local = [c for c in candidates if c.path == mod.path]
+            if local:
+                return local
+        return candidates
+
+    def _nested_of(self, info: FunctionInfo) -> List[FunctionInfo]:
+        prefix = info.qualname + ".<locals>."
+        return [c for c in self.modules[info.path].functions
+                if c.qualname.startswith(prefix)]
+
+    def _mark_traced(self):
+        queue: List[Tuple[FunctionInfo, str]] = []
+        for mod in self.modules.values():
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                wrapper = self._wrapper_name(mod, node)
+                if wrapper is None:
+                    continue
+                why = f"{mod.path}:{node.lineno} {wrapper}()"
+                indices = _FN_ARG_INDICES.get(wrapper, (0,))
+                fn_args = [node.args[i] for i in indices
+                           if i < len(node.args)]
+                fn_args += [k.value for k in node.keywords
+                            if k.arg in _FN_KEYWORDS]
+                for arg in fn_args:
+                    for info in self._resolve_fn_expr(mod, arg):
+                        queue.append((info, why))
+        while queue:
+            info, why = queue.pop()
+            if info.key in self.traced:
+                continue
+            self.traced[info.key] = info
+            self.traced_via[info.key] = why
+            for callee in self._callees(info):
+                queue.append((callee, f"called from {info.key}"))
+
+    def _callees(self, info: FunctionInfo) -> List[FunctionInfo]:
+        mod = self.modules[info.path]
+        out: List[FunctionInfo] = []
+        for node in _body_without_nested(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Name):
+                assigned = mod.assigned_calls.get(func.id)
+                if assigned is not None:
+                    out.extend(self._resolve_fn_expr(mod, assigned, 1))
+                out.extend(self._resolve_name(mod, func.id,
+                                              prefer_module=True))
+            elif isinstance(func, ast.Attribute):
+                base = dotted_name(func.value)
+                base_head = base.split(".")[0] if base else None
+                if base_head and self._is_external_base(mod, base_head):
+                    continue
+                if base_head != "self" and func.attr in GENERIC_METHOD_NAMES:
+                    continue
+                out.extend(self._resolve_name(mod, func.attr,
+                                              prefer_module=False))
+            # function-valued arguments — but only of calls that are known
+            # higher-order (tree_map etc.); resolving every Name argument
+            # would drag in unrelated defs that share a variable's name
+            # (e.g. an int parameter called `batch`)
+            tail = (dotted_name(func) or "").split(".")[-1]
+            if tail in _HIGHER_ORDER_TAILS:
+                for arg in node.args:
+                    if isinstance(arg, (ast.Lambda, ast.Name)):
+                        out.extend(self._resolve_fn_expr(mod, arg, 3))
+            else:
+                for arg in node.args:
+                    if isinstance(arg, ast.Lambda):
+                        out.extend(self._resolve_fn_expr(mod, arg, 3))
+        return out
+
+    # -- public queries ----------------------------------------------------
+
+    def is_traced(self, info: FunctionInfo) -> bool:
+        return info.key in self.traced
+
+    def traced_functions(self) -> List[FunctionInfo]:
+        return sorted(self.traced.values(), key=lambda i: (i.path, i.lineno))
+
+    def host_functions(self, path_prefixes: Sequence[str]
+                       ) -> List[FunctionInfo]:
+        """Non-traced functions in the given subtrees (serve/train drivers)."""
+        out = []
+        for mod in self.modules.values():
+            if not any(mod.path.startswith(p) for p in path_prefixes):
+                continue
+            out.extend(i for i in mod.functions if i.key not in self.traced)
+        return sorted(out, key=lambda i: (i.path, i.lineno))

@@ -1,0 +1,165 @@
+"""Sharding-coverage check: the SH00x family.
+
+``distributed/sharding.py`` maps logical param axes (``vocab``, ``ff``,
+``embed``, ...) to mesh axes.  Nothing guarantees every model family's
+param tree speaks that vocabulary: a new module can introduce an axis name
+the rules have never heard of, and ``spec_for_param`` will silently
+replicate the leaf — correct but quietly unscaled, the exact failure PR 6's
+profiling surfaced as all-gather storms.  This check instantiates each
+model family's parameter tree **abstractly** (the spec-first ``template``
+pytree — shapes and logical axes, no device arrays, the static counterpart
+of ``jax.eval_shape``) and audits it against both rule sets the repo
+serves with (FSDP for training, inference-TP for serving):
+
+==========  =========  =====================================================
+check id    severity   fires on
+==========  =========  =====================================================
+``SH001``   error      a leaf carrying a logical axis name absent from
+                       ``ShardingRules.logical_map`` — no rule matches; the
+                       leaf is silently replicated forever
+``SH002``   warning    two dims of one leaf mapping to the same mesh axis —
+                       first-dim-wins applies, the second dim is quietly
+                       replicated (make the intent explicit in the spec)
+``SH003``   warning    a dead rule: a logical axis the rule set maps to a
+                       mesh axis that **no** leaf of any family uses
+``SH004``   warning    a >=2-D leaf whose spec is fully replicated under
+                       the rule mapping (every dim maps to None) — legal,
+                       but worth knowing when it is a large matrix
+==========  =========  =====================================================
+
+The audit runs on a size-1 stub mesh so divisibility never masks a mapping
+question: what is checked is the *rule coverage*, not a particular
+topology's divisor accidents.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import Finding, SEV_ERROR, SEV_WARNING
+
+SLUGS = {
+    "SH001": "unmatched-leaf",
+    "SH002": "multi-dim-same-axis",
+    "SH003": "dead-rule",
+    "SH004": "replicated-matrix",
+}
+
+#: one representative per model family (dense / ssm / moe / vlm / audio) —
+#: the same five the engine mesh-parity tests serve
+COVERAGE_FAMILIES = ("llama3.2-1b", "mamba2-130m", "olmoe-1b-7b",
+                    "llama-3.2-vision-11b", "whisper-large-v3")
+
+#: the two rule sets the repo actually runs: FSDP training, inference TP
+RULE_SET_KINDS = ("fsdp", "inference-tp")
+
+_PATH = "src/repro/distributed/sharding.py"
+
+
+class _StubMesh:
+    """Duck-typed mesh: rules_for_mesh/_axis_size read only axis_names and
+    shape.  Size-1 axes make every dim divisible, so the audit sees the
+    pure rule mapping rather than one topology's divisor accidents."""
+    axis_names = ("data", "model")
+    shape = {"data": 1, "model": 1}
+
+
+def _rule_sets():
+    from repro.distributed.sharding import rules_for_mesh
+    mesh = _StubMesh()
+    return {"fsdp": rules_for_mesh(mesh, fsdp=True),
+            "inference-tp": rules_for_mesh(mesh, fsdp=False)}
+
+
+def _leaf_items(family: str) -> List[Tuple[str, object]]:
+    """(path, ParamSpec) pairs of one family's abstract param template."""
+    import jax
+
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.models import build_model
+    from repro.models.params import is_spec
+
+    cfg = ARCHITECTURES[family].reduced()
+    template = build_model(cfg).template
+    flat = jax.tree_util.tree_flatten_with_path(template, is_leaf=is_spec)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def check_coverage(families=COVERAGE_FAMILIES) -> List[Finding]:
+    findings: List[Finding] = []
+    rule_sets = _rule_sets()
+    # logical axes seen on any leaf of any family, per rule set relevance
+    seen_axes: set = set()
+
+    for family in families:
+        for path, spec in _leaf_items(family):
+            axes = tuple(spec.axes)
+            seen_axes.update(a for a in axes if a is not None)
+            for kind, rules in rule_sets.items():
+                mapping = rules.logical_map()
+                scope = f"{family}:{path}[{kind}]"
+                unknown = sorted({a for a in axes
+                                  if a is not None and a not in mapping})
+                if unknown:
+                    findings.append(Finding(
+                        check_id="SH001", severity=SEV_ERROR, path=_PATH,
+                        line=0, scope=scope,
+                        message=(f"logical axes {unknown} match no rule in "
+                                 f"ShardingRules.logical_map — leaf "
+                                 f"{spec.shape} silently replicated")))
+                    continue
+                mapped = [mapping.get(a) for a in axes]
+                hits = [m for m in mapped if m is not None]
+                if len(hits) != len(set(hits)):
+                    dup = sorted({m for m in hits if hits.count(m) > 1})
+                    findings.append(Finding(
+                        check_id="SH002", severity=SEV_WARNING, path=_PATH,
+                        line=0, scope=scope,
+                        message=(f"dims {axes} map {dup} twice — "
+                                 f"first-dim-wins replicates the rest")))
+                # a matrix is worth a warning only when >= 2 of its dims
+                # carry real (non-layer-stacking) logical names and still
+                # none of them sharded — a 'layer'-stacked norm scale or a
+                # replicated position embedding is business as usual
+                named = [a for a in axes if a not in (None, "layer")]
+                if len(named) >= 2 and not hits:
+                    findings.append(Finding(
+                        check_id="SH004", severity=SEV_WARNING, path=_PATH,
+                        line=0, scope=scope,
+                        message=(f"{len(spec.shape)}-D leaf {spec.shape} "
+                                 f"with axes {axes} is fully replicated "
+                                 f"under the {kind} rules")))
+
+    # dead rules: mapped logical axes no family's template ever mentions
+    for kind, rules in rule_sets.items():
+        mapping = rules.logical_map()
+        for logical, mesh_axis in mapping.items():
+            if logical is None or mesh_axis is None:
+                continue
+            if logical not in seen_axes:
+                findings.append(Finding(
+                    check_id="SH003", severity=SEV_WARNING, path=_PATH,
+                    line=0, scope=f"{logical}[{kind}]",
+                    message=(f"rule {logical!r} -> {mesh_axis!r} matches "
+                             f"no param leaf of any model family — dead "
+                             f"rule (or a family lost its axis names)")))
+    return findings
+
+
+def coverage_summary(families=COVERAGE_FAMILIES) -> Dict[str, dict]:
+    """Per-family leaf/spec statistics for the CLI report."""
+    rule_sets = _rule_sets()
+    from repro.distributed.sharding import spec_for_param
+    mesh = _StubMesh()
+    out: Dict[str, dict] = {}
+    for family in families:
+        items = _leaf_items(family)
+        per_kind = {}
+        for kind, rules in rule_sets.items():
+            sharded = sum(
+                1 for _p, s in items
+                if any(a is not None
+                       for a in tuple(spec_for_param(mesh, rules, s)))
+            )
+            per_kind[kind] = {"leaves": len(items), "sharded": sharded}
+        out[family] = per_kind
+    return out

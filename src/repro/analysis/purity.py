@@ -1,0 +1,314 @@
+"""Trace-purity lint: the TP00x check family.
+
+Runs over the :class:`~repro.analysis.callgraph.CallGraph`'s traced set
+(everything reachable from a ``jax.jit``/``pallas_call``/``lax.*`` body)
+plus the serve/train host drivers, and reports:
+
+==========  =========  =====================================================
+check id    severity   fires on
+==========  =========  =====================================================
+``TP001``   error      host transfers: ``jax.device_get`` /
+                       ``block_until_ready`` / ``.item()`` / ``.tolist()``
+                       anywhere in serve/train driver code or traced code;
+                       ``np.asarray``/``np.array`` in traced code
+``TP002``   error      ``float()``/``int()``/``bool()`` coercion of a
+                       computed value in traced code (a guaranteed
+                       ``ConcretizationTypeError`` or silent trace-time bake)
+``TP003``   error      Python ``if``/``while`` branching on a device value
+                       (``jnp.``/``lax.`` call or ``.any()``/``.all()`` in
+                       the test) inside traced code
+``TP004``   error      nondeterminism in traced code: stdlib ``random.*``,
+                       ``np.random.*``, ``time.*`` (``jax.random`` is keyed
+                       and deterministic — allowed)
+``TP005``   error      a jitted entry point (``X = jax.jit(...)``) called
+                       outside any ``profiling.annotate(...)`` scope in a
+                       serve/train module — invisible to the PR 6 profiler
+==========  =========  =====================================================
+
+Sanctioned exceptions carry a pragma **on the offending line or the line
+above**::
+
+    buf_h = jax.device_get((buf, lens))  # analysis: allow(TP001)
+
+``allow(host-transfer)`` (the slug) works too, as does a bare ``analysis:
+allow`` to waive every check on that line.  Pragmas beat baseline entries:
+the waiver lives next to the code it excuses.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Sequence, Set
+
+from repro.analysis.callgraph import (CallGraph, FunctionInfo, ModuleInfo,
+                                      _body_without_nested, dotted_name)
+from repro.analysis.findings import Finding, SEV_ERROR
+
+#: check id -> human slug (either form valid in a pragma)
+SLUGS = {
+    "TP001": "host-transfer",
+    "TP002": "host-coercion",
+    "TP003": "traced-control-flow",
+    "TP004": "nondeterminism",
+    "TP005": "missing-annotation",
+}
+
+#: subtrees whose drivers may host-sync only at pragma'd lines
+DRIVER_PREFIXES = ("src/repro/serve", "src/repro/train")
+
+_PRAGMA_RE = re.compile(r"#\s*analysis:\s*allow(?:\(([^)]*)\))?")
+
+_HOST_TRANSFER_ATTRS = {"device_get", "block_until_ready"}
+_HOST_METHODS = {"item", "tolist"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_ANNOTATE_TAILS = {"annotate", "trace", "TraceSession"}
+# call tails that inspect static metadata — legal in an if/while test
+_STATIC_CALL_TAILS = {"dtype", "issubdtype", "result_type", "isdtype",
+                      "isinstance", "len", "shape", "ndim"}
+
+
+def pragma_allows(mod: ModuleInfo, lineno: int, check_id: str) -> bool:
+    """True when line `lineno` (or the line above) waives `check_id`."""
+    for ln in (lineno, lineno - 1):
+        if not (1 <= ln <= len(mod.lines)):
+            continue
+        m = _PRAGMA_RE.search(mod.lines[ln - 1])
+        if m is None:
+            continue
+        tokens = m.group(1)
+        if tokens is None or not tokens.strip():
+            return True                       # bare allow: waive everything
+        toks = {t.strip() for t in tokens.split(",")}
+        if check_id in toks or SLUGS.get(check_id, "") in toks:
+            return True
+    return False
+
+
+def _is_numpy_alias(mod: ModuleInfo, base: str) -> bool:
+    return mod.imports.get(base, "").split(".")[0] == "numpy"
+
+
+def _in_try(node: ast.AST, fn_node: ast.AST) -> bool:
+    """True when `node` sits under a try: — the tracer-probe idiom
+    (``try: int(x)`` / ``except TracerError``) is a legal static test."""
+    root = fn_node if not isinstance(fn_node, ast.Lambda) else fn_node.body
+    for sub in ast.walk(root):
+        if isinstance(sub, ast.Try):
+            for inner in ast.walk(sub):
+                if inner is node:
+                    return True
+    return False
+
+
+class PurityChecker:
+    """Run the TP00x family over one CallGraph."""
+
+    def __init__(self, graph: CallGraph):
+        self.graph = graph
+        self.findings: List[Finding] = []
+
+    # -- emit ---------------------------------------------------------------
+
+    def _flag(self, check_id: str, mod: ModuleInfo, node: ast.AST,
+              scope: str, message: str):
+        if pragma_allows(mod, node.lineno, check_id):
+            return
+        self.findings.append(Finding(
+            check_id=check_id, severity=SEV_ERROR, path=mod.path,
+            line=node.lineno, scope=scope, message=message))
+
+    # -- entry --------------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        for info in self.graph.traced_functions():
+            self._check_traced(info)
+        for info in self.graph.host_functions(DRIVER_PREFIXES):
+            self._check_host_driver(info)
+        for path, mod in sorted(self.graph.modules.items()):
+            if path.startswith(DRIVER_PREFIXES):
+                self._check_annotations(mod)
+        return self.findings
+
+    # -- traced-code checks --------------------------------------------------
+
+    def _check_traced(self, info: FunctionInfo):
+        mod = self.graph.modules[info.path]
+        scope = info.qualname
+        for node in _body_without_nested(info.node):
+            if isinstance(node, ast.Call):
+                self._traced_call(mod, info, node, scope)
+            elif isinstance(node, (ast.If, ast.While)):
+                self._traced_branch(mod, node, scope)
+
+    def _traced_call(self, mod: ModuleInfo, info: FunctionInfo,
+                     node: ast.Call, scope: str):
+        dn = dotted_name(node.func) or ""
+        parts = dn.split(".") if dn else []
+        tail = parts[-1] if parts else ""
+        base = parts[0] if parts else ""
+
+        # TP001 — host transfers
+        if tail in _HOST_TRANSFER_ATTRS:
+            self._flag("TP001", mod, node, scope,
+                       f"`{dn}` forces a host sync inside traced code")
+        elif tail in _HOST_METHODS and len(parts) >= 2:
+            self._flag("TP001", mod, node, scope,
+                       f"`.{tail}()` materializes a traced value on host")
+        elif tail in {"asarray", "array"} and _is_numpy_alias(mod, base):
+            self._flag("TP001", mod, node, scope,
+                       f"`{dn}` pulls a traced value to host numpy")
+
+        # TP002 — host coercion of a computed value
+        elif tail in {"float", "int", "bool"} and len(parts) == 1 \
+                and node.args:
+            if self._coerces_computed(node) and not _in_try(node, info.node):
+                self._flag("TP002", mod, node, scope,
+                           f"`{tail}()` on a computed value bakes it at "
+                           f"trace time (or raises ConcretizationTypeError)")
+
+        # TP004 — nondeterminism
+        if base and len(parts) >= 2:
+            target = mod.imports.get(base, base)
+            head = target.split(".")[0]
+            if head in {"random", "time"}:
+                self._flag("TP004", mod, node, scope,
+                           f"`{dn}` is host nondeterminism/clock state — "
+                           f"baked in at trace time")
+            elif head == "numpy" and "random" in parts:
+                self._flag("TP004", mod, node, scope,
+                           f"`{dn}` draws from host RNG at trace time; "
+                           f"use jax.random with an explicit key")
+
+    def _coerces_computed(self, node: ast.Call) -> bool:
+        """Heuristic: the coercion argument involves a call or an indexing —
+        the shapes real traced-value coercions take (``float(x.mean())``,
+        ``int(cur[0])``).  Plain arithmetic on local names
+        (``int(d * fraction)``) is static dim math and stays silent, as is
+        anything built from ``.shape``/``.ndim``/``.dtype`` lookups."""
+        for sub in ast.walk(node.args[0]):
+            if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+                return False                   # .shape[...] math is static
+        for sub in ast.walk(node.args[0]):
+            if isinstance(sub, ast.Subscript):
+                return True
+            if isinstance(sub, ast.Call):
+                if (dotted_name(sub.func) or "") == "len":
+                    continue
+                return True
+        return False
+
+    def _traced_branch(self, mod: ModuleInfo, node: ast.AST, scope: str):
+        kind = "if" if isinstance(node, ast.If) else "while"
+        for sub in ast.walk(node.test):
+            if not isinstance(sub, ast.Call):
+                continue
+            dn = dotted_name(sub.func) or ""
+            parts = dn.split(".")
+            if len(parts) < 2:
+                continue
+            if parts[-1] in _STATIC_CALL_TAILS:
+                continue          # dtype/shape introspection is trace-static
+            head = mod.imports.get(parts[0], parts[0]).split(".")[0]
+            if head == "jax" or parts[-1] in {"any", "all"}:
+                self._flag(
+                    "TP003", mod, node, scope,
+                    f"Python `{kind}` on a device value (`{dn}` in the "
+                    f"test) — use lax.cond/lax.while_loop or jnp.where")
+                return
+
+    # -- host-driver checks --------------------------------------------------
+
+    def _check_host_driver(self, info: FunctionInfo):
+        """In serve/train driver code only the pragma'd once-per-wave sync
+        may transfer: every other device_get/block_until_ready is a leak."""
+        mod = self.graph.modules[info.path]
+        for node in _body_without_nested(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func) or ""
+            tail = dn.split(".")[-1] if dn else ""
+            if tail in _HOST_TRANSFER_ATTRS:
+                self._flag(
+                    "TP001", mod, node, info.qualname,
+                    f"`{dn}` in driver code outside the sanctioned "
+                    f"per-wave sync (pragma the one blessed site)")
+
+    # -- annotation coverage -------------------------------------------------
+
+    def _jitted_names(self, mod: ModuleInfo) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not (isinstance(node.value, ast.Call)
+                    and (dotted_name(node.value.func) or ""
+                         ).split(".")[-1] == "jit"):
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute):
+                    names.add(tgt.attr)
+                elif isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+        return names
+
+    def _check_annotations(self, mod: ModuleInfo):
+        jitted = self._jitted_names(mod)
+        if not jitted:
+            return
+        for info in mod.functions:
+            if isinstance(info.node, ast.Lambda):
+                continue
+            self._walk_annotated(mod, info, jitted, info.node.body,
+                                 annotated=False)
+
+    def _is_annotate_with(self, stmt: ast.With) -> bool:
+        for item in stmt.items:
+            ctx = item.context_expr
+            if isinstance(ctx, ast.Call):
+                dn = dotted_name(ctx.func) or ""
+                if dn.split(".")[-1] in _ANNOTATE_TAILS:
+                    return True
+        return False
+
+    def _walk_annotated(self, mod: ModuleInfo, info: FunctionInfo,
+                        jitted: Set[str], body: Sequence[ast.stmt],
+                        annotated: bool):
+        """Recurse through compound statements tracking whether execution is
+        inside a ``with annotate(...)`` scope; flag jitted-entry calls that
+        happen outside one."""
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue                        # its own scope
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                inner = annotated or self._is_annotate_with(stmt)
+                self._walk_annotated(mod, info, jitted, stmt.body, inner)
+                continue
+            sub_bodies: List[Sequence[ast.stmt]] = []
+            if isinstance(stmt, (ast.If, ast.For, ast.AsyncFor, ast.While)):
+                sub_bodies = [stmt.body, stmt.orelse]
+            elif isinstance(stmt, ast.Try):
+                sub_bodies = [stmt.body, stmt.orelse, stmt.finalbody] + \
+                    [h.body for h in stmt.handlers]
+            for sb in sub_bodies:
+                self._walk_annotated(mod, info, jitted, sb, annotated)
+            if annotated:
+                continue
+            # a simple statement (or a compound header expression): any
+            # call to a jitted entry here is un-annotated
+            headers = ast.iter_child_nodes(stmt) if sub_bodies else [stmt]
+            for header in headers:
+                if isinstance(header, ast.stmt) and sub_bodies:
+                    continue                    # bodies handled above
+                for sub in ast.walk(header):
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    func = sub.func
+                    name = func.attr if isinstance(func, ast.Attribute) \
+                        else (func.id if isinstance(func, ast.Name) else "")
+                    if name in jitted:
+                        self._flag(
+                            "TP005", mod, sub, info.qualname,
+                            f"jitted entry `{name}` called outside any "
+                            f"profiling.annotate(...) scope — invisible "
+                            f"in trace breakdowns")

@@ -640,7 +640,9 @@ class Engine:
         with annotate("serve.prefill_wave"):
             logits0, cache = self._prefill(self.params, batch, cache)
             if cfg.profile:
-                jax.block_until_ready(logits0)
+                # deliberate sync: profile mode wants the true prefill /
+                # decode wall-time split, not dispatch-pipeline overlap
+                jax.block_until_ready(logits0)   # analysis: allow(TP001)
         t1 = time.perf_counter()
 
         if self._loop is None:
@@ -654,7 +656,7 @@ class Engine:
 
             # The ONE host transfer of this wave (== of the whole generate
             # call when the batch fits the slot pool).
-            buf_h, lens_h = jax.device_get((buf, lens))
+            buf_h, lens_h = jax.device_get((buf, lens))  # analysis: allow(TP001)
         t2 = time.perf_counter()
         self._stats["device_transfers"] += 1
         self._stats["waves"] += 1

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.profiling import annotate
 
 
 def _greedy(logits: jax.Array) -> jax.Array:
@@ -38,18 +39,22 @@ def generate_per_prompt(model: Model, params, prompts: List[List[int]],
         if extra_inputs:
             batch.update({k: v[i:i + 1] for k, v in extra_inputs.items()})
         cache = model.init_cache(1, max_len)
-        logits, cache = prefill(params, batch, cache)
+        with annotate("reference.prefill"):
+            logits, cache = prefill(params, batch, cache)
         offset = jnp.int32(len(prompt))
         cur = _greedy(logits)
         toks: List[int] = []
         for _ in range(max_new_tokens):
-            t = int(jax.device_get(cur)[0])
+            # by-design per-token sync: the oracle trades throughput for the
+            # simplest possible trust chain (one prompt, one token at a time)
+            t = int(jax.device_get(cur)[0])      # analysis: allow(TP001)
             toks.append(t)
             if eos_token is not None and t == eos_token:
                 break
             if len(toks) == max_new_tokens:
                 break
-            logits, cache = decode(params, cur[:, None], cache, offset)
+            with annotate("reference.decode"):
+                logits, cache = decode(params, cur[:, None], cache, offset)
             offset = offset + 1
             cur = _greedy(logits)
         outs.append(toks)
@@ -116,18 +121,24 @@ class PerTokenSyncEngine:
         b = len(prompts)
         t0 = time.perf_counter()
         cache = self.model.init_cache(b, self.max_len)
-        logits, cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(np.array(prompts, np.int32))},
-            cache)
+        with annotate("reference.prefill"):
+            logits, cache = self._prefill(
+                self.params,
+                {"tokens": jnp.asarray(np.array(prompts, np.int32))},
+                cache)
         if self.profile:
-            jax.block_until_ready(logits)
+            # deliberate sync: the prefill/decode wall-time split is the
+            # whole point of profile mode
+            jax.block_until_ready(logits)        # analysis: allow(TP001)
         t1 = time.perf_counter()
         offset = jnp.int32(plen)
         cur = _greedy(logits)
         outs: List[List[int]] = [[] for _ in range(b)]
         done = np.zeros(b, bool)
         for step in range(max_new_tokens):
-            cur_np = np.asarray(jax.device_get(cur))     # the per-token sync
+            # the per-token sync IS this baseline's execution model — the
+            # cost the fused engine's speedup ratio is measured against
+            cur_np = np.asarray(jax.device_get(cur))   # analysis: allow(TP001)
             for i in range(b):
                 if not done[i]:
                     outs[i].append(int(cur_np[i]))
@@ -135,8 +146,9 @@ class PerTokenSyncEngine:
                         done[i] = True
             if done.all() or step == max_new_tokens - 1:
                 break
-            logits, cache = self._decode(self.params, cur[:, None], cache,
-                                         offset)
+            with annotate("reference.decode"):
+                logits, cache = self._decode(self.params, cur[:, None],
+                                             cache, offset)
             offset = offset + 1
             cur = _greedy(logits)
         self.last_prefill_s = t1 - t0

@@ -1,0 +1,44 @@
+"""Deliberately impure traced code — fodder for the TP00x lint tests.
+
+This file is never imported at runtime; ``tests/test_analysis.py`` points a
+:class:`repro.analysis.callgraph.CallGraph` at the fixture tree and asserts
+each check fires exactly where marked below.
+"""
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kernel_bad(x):
+    jax.device_get(x)                       # TP001: host transfer
+    y = float(x.sum())                      # TP002: host coercion
+    if jnp.any(x > 0):                      # TP003: traced control flow
+        y += random.random()                # TP004: stdlib RNG
+    z = np.asarray(x)                       # TP001: numpy pull
+    t = time.time()                         # TP004: clock state
+    r = np.random.rand(3)                   # TP004: host RNG
+    sanctioned = jax.device_get(x)          # analysis: allow(TP001)
+    return y, z, t, r, sanctioned
+
+
+run = jax.jit(kernel_bad)
+
+
+def helper(x):
+    return int(x[0])                        # TP002, via reachability
+
+
+def kernel_calls_helper(x):
+    return helper(x) + 1
+
+
+run2 = jax.jit(kernel_calls_helper)
+
+
+def host_only(x):
+    # negative control: unreachable from any traced root, and this module
+    # is not a serve/train driver — the same patterns stay silent here
+    return float(np.asarray(x).sum())

@@ -1,0 +1,20 @@
+"""Pure traced code — must produce zero findings.
+
+Exercises the patterns the lint must NOT flag: static shape/dtype
+introspection, ``float()`` of shape math, keyed jax.random draws.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def kernel_clean(x, key):
+    if x.ndim == 2:                      # static: branches on rank
+        x = x.reshape(-1)
+    if jnp.issubdtype(x.dtype, jnp.integer):   # static: dtype introspection
+        x = x.astype(jnp.float32)
+    scale = float(x.shape[0])            # static: shape math, not a tracer
+    noise = jax.random.normal(key, x.shape)    # keyed RNG is deterministic
+    return jnp.tanh(x) * scale + noise
+
+
+run = jax.jit(kernel_clean)

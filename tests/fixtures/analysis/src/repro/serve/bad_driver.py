@@ -1,0 +1,29 @@
+"""Driver-code fixture: sanctioned-sync and annotation-coverage patterns.
+
+Lives under a ``serve/`` path on purpose — the fixture tree mirrors the real
+layout so the DRIVER_PREFIXES host checks (pragma'd once-per-wave sync,
+TP005 annotate coverage) apply here exactly as they do in the repo.
+"""
+import jax
+
+from repro.profiling import annotate
+
+
+def _model(tokens):
+    return tokens * 2
+
+
+step = jax.jit(_model)
+
+
+def serve_wave(batch):
+    out = step(batch)                    # TP005: jitted entry, no annotate
+    jax.device_get(out)                  # TP001: driver sync, no pragma
+    return out
+
+
+def serve_wave_ok(batch):
+    with annotate("wave"):
+        out = step(batch)
+    host = jax.device_get(out)           # analysis: allow(TP001)
+    return host

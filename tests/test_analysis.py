@@ -1,0 +1,275 @@
+"""Tests for the ``repro.analysis`` static invariant checker.
+
+Three layers:
+
+1. **Fixture lint** — a miniature repo tree under ``tests/fixtures/analysis``
+   seeded with one instance of every TP00x violation (and a clean twin);
+   each check must fire exactly where the fixture marks it and nowhere else.
+2. **Artifact validators** — synthetic tuned DBs / bench baselines with
+   known defects; each AR00x/BA00x check must reject its case.
+3. **Ratchet + live gate** — baseline accept/round-trip semantics, and the
+   real repo linted against the committed ``tests/analysis_baseline.json``
+   (the same gate CI runs, so a violation fails locally before it fails CI).
+"""
+import json
+import os
+
+import pytest
+
+from repro.analysis.artifacts import (parse_mesh_label,
+                                      validate_bench_baseline,
+                                      validate_tuning_db)
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.findings import (Finding, SEV_ERROR, load_baseline,
+                                     ratchet, save_baseline)
+from repro.analysis.purity import PurityChecker
+from repro.core.tuning_db import TuningDB, TuningRecord
+
+FIXTURE_ROOT = os.path.join(os.path.dirname(__file__), "fixtures", "analysis")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BAD_TRACED = "src/repro/kernels/bad_traced.py"
+CLEAN_TRACED = "src/repro/kernels/clean_traced.py"
+BAD_DRIVER = "src/repro/serve/bad_driver.py"
+
+
+@pytest.fixture(scope="module")
+def fixture_graph():
+    return CallGraph(FIXTURE_ROOT, package_dir="src/repro")
+
+
+@pytest.fixture(scope="module")
+def fixture_findings(fixture_graph):
+    return PurityChecker(fixture_graph).run()
+
+
+# ---------------------------------------------------------------------------
+# call graph
+# ---------------------------------------------------------------------------
+
+def test_traced_set_includes_jit_roots_and_callees(fixture_graph):
+    traced = {i.qualname for i in fixture_graph.traced_functions()}
+    assert {"kernel_bad", "kernel_calls_helper", "helper",
+            "kernel_clean", "_model"} <= traced
+
+
+def test_host_code_stays_out_of_traced_set(fixture_graph):
+    traced = {i.qualname for i in fixture_graph.traced_functions()}
+    assert "host_only" not in traced
+    assert "serve_wave" not in traced
+    assert "serve_wave_ok" not in traced
+
+
+# ---------------------------------------------------------------------------
+# TP00x purity checks against the fixtures
+# ---------------------------------------------------------------------------
+
+def _by_check(findings):
+    out = {}
+    for f in findings:
+        out.setdefault(f.check_id, []).append(f)
+    return out
+
+
+def test_every_tp_check_fires_on_the_bad_fixtures(fixture_findings):
+    by = _by_check(fixture_findings)
+    counts = {k: len(v) for k, v in by.items()}
+    assert counts == {"TP001": 3, "TP002": 2, "TP003": 1,
+                      "TP004": 3, "TP005": 1}, [
+        f.render() for f in fixture_findings]
+
+
+def test_findings_anchor_to_the_marked_scopes(fixture_findings):
+    by = _by_check(fixture_findings)
+    assert {f.scope for f in by["TP002"]} == {"kernel_bad", "helper"}
+    assert {f.scope for f in by["TP003"]} == {"kernel_bad"}
+    assert {f.scope for f in by["TP005"]} == {"serve_wave"}
+    driver_tp001 = [f for f in by["TP001"] if f.path == BAD_DRIVER]
+    assert [f.scope for f in driver_tp001] == ["serve_wave"]
+
+
+def test_clean_fixture_is_silent(fixture_findings):
+    assert not [f for f in fixture_findings if f.path == CLEAN_TRACED]
+
+
+def test_pragma_suppresses_the_sanctioned_sync(fixture_findings):
+    # bad_traced.py has three device_get/asarray sites; the pragma'd one
+    # must not appear, and serve_wave_ok's pragma'd driver sync neither
+    tp001 = [f for f in fixture_findings if f.check_id == "TP001"]
+    assert len([f for f in tp001 if f.path == BAD_TRACED]) == 2
+    assert not [f for f in tp001 if f.scope == "serve_wave_ok"]
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet
+# ---------------------------------------------------------------------------
+
+def _finding(check="TP001", scope="f", path="src/x.py"):
+    return Finding(check_id=check, severity=SEV_ERROR, path=path, line=7,
+                   scope=scope, message="m")
+
+
+def test_ratchet_accepts_baselined_findings(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    current = [_finding(scope="a"), _finding(scope="b")]
+    save_baseline(current, path)
+    new, fixed = ratchet(current, load_baseline(path))
+    assert new == [] and fixed == []
+
+
+def test_ratchet_fails_on_any_new_finding(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    save_baseline([_finding(scope="a")], path)
+    extra = _finding(scope="b")
+    new, fixed = ratchet([_finding(scope="a"), extra], load_baseline(path))
+    assert new == [extra] and fixed == []
+
+
+def test_ratchet_is_line_free_and_reports_fixed_keys(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    save_baseline([_finding(scope="a"), _finding(scope="gone")], path)
+    moved = Finding(check_id="TP001", severity=SEV_ERROR, path="src/x.py",
+                    line=99, scope="a", message="m")   # same key, new line
+    new, fixed = ratchet([moved], load_baseline(path))
+    assert new == []
+    assert fixed == ["TP001:src/x.py:gone"]
+
+
+def test_missing_baseline_means_empty_floor(tmp_path):
+    assert load_baseline(str(tmp_path / "nope.json")) == {}
+
+
+def test_baseline_schema_version_is_enforced(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"schema_version": 99, "findings": []}))
+    with pytest.raises(ValueError, match="schema_version"):
+        load_baseline(str(path))
+
+
+# ---------------------------------------------------------------------------
+# artifact validators (AR00x / BA00x)
+# ---------------------------------------------------------------------------
+
+def _save_db(tmp_path, records, hardware="tpu-v5e", stem=None):
+    db = TuningDB(hardware)
+    for rec in records:
+        db.add(rec, keep_best=False)
+    path = str(tmp_path / f"{stem or hardware}.json")
+    db.save(path)
+    return path
+
+
+def _checks(findings):
+    return {f.check_id for f in findings}
+
+
+def test_ar001_misaligned_block_rejected(tmp_path):
+    path = _save_db(tmp_path, [
+        TuningRecord.gemm("bfloat16", 512, 512, 512, 100, 100, 100)])
+    assert "AR001" in _checks(validate_tuning_db(path))
+
+
+def test_ar002_vmem_overflow_rejected(tmp_path):
+    path = _save_db(tmp_path, [
+        TuningRecord.gemm("float32", 8192, 8192, 8192, 4096, 4096, 4096)])
+    assert "AR002" in _checks(validate_tuning_db(path))
+
+
+def test_ar003_orphan_mesh_axis_rejected(tmp_path):
+    path = _save_db(tmp_path, [
+        TuningRecord.gemm("float32", 512, 512, 512, 128, 128, 128,
+                          mesh="ring4")])
+    assert "AR003" in _checks(validate_tuning_db(path))
+
+
+def test_ar004_stale_decode_unroll_warned(tmp_path):
+    path = _save_db(tmp_path, [
+        TuningRecord(op="decode_loop", dtype="float32", shape=(8, 64),
+                     block=(3,))])
+    found = validate_tuning_db(path)
+    assert "AR004" in _checks(found)
+    assert all(f.severity != SEV_ERROR for f in found)
+
+
+def test_ar005_unknown_hardware_rejected(tmp_path):
+    path = _save_db(tmp_path, [], hardware="vax-9000", stem="vax-9000")
+    assert "AR005" in _checks(validate_tuning_db(path))
+
+
+def test_committed_record_passes_clean(tmp_path):
+    path = _save_db(tmp_path, [
+        TuningRecord.gemm("bfloat16", 512, 512, 512, 128, 128, 128,
+                          mesh="data4xmodel2")])
+    assert validate_tuning_db(path) == []
+
+
+def _save_bench(tmp_path, fname, blob):
+    path = str(tmp_path / fname)
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    return path
+
+
+def test_ba001_missing_rows_rejected(tmp_path):
+    path = _save_bench(tmp_path, "BENCH_gemm__tpu-v5e.json",
+                       {"hardware": "tpu-v5e"})
+    assert "BA001" in _checks(validate_bench_baseline(path))
+
+
+def test_ba001_duplicate_names_rejected(tmp_path):
+    rows = [{"name": "a", "us_per_call": 1.0},
+            {"name": "a", "us_per_call": 2.0}]
+    path = _save_bench(tmp_path, "BENCH_gemm__tpu-v5e.json", {"rows": rows})
+    assert "BA001" in _checks(validate_bench_baseline(path))
+
+
+def test_ba002_zero_baseline_warns_not_errors(tmp_path):
+    rows = [{"name": "a", "us_per_call": 0}]
+    path = _save_bench(tmp_path, "BENCH_gemm__tpu-v5e.json", {"rows": rows})
+    found = validate_bench_baseline(path)
+    assert _checks(found) == {"BA002"}
+    assert all(f.severity != SEV_ERROR for f in found)
+
+
+def test_ba003_hardware_mismatch_rejected(tmp_path):
+    rows = [{"name": "a", "us_per_call": 1.0}]
+    path = _save_bench(tmp_path, "BENCH_gemm__tpu-v5e.json",
+                       {"rows": rows, "hardware": "cpu-interpret"})
+    assert "BA003" in _checks(validate_bench_baseline(path))
+
+
+def test_ba003_mesh_filename_needs_mesh_blob(tmp_path):
+    rows = [{"name": "a", "us_per_call": 1.0}]
+    path = _save_bench(tmp_path, "BENCH_serve__tpu-v5e-mesh.json",
+                       {"rows": rows})
+    assert "BA003" in _checks(validate_bench_baseline(path))
+
+
+def test_good_bench_baseline_passes(tmp_path):
+    rows = [{"name": "a", "us_per_call": 1.0},
+            {"name": "b", "us_per_call": 0, "derived": True}]
+    path = _save_bench(tmp_path, "BENCH_gemm__tpu-v5e.json",
+                       {"rows": rows, "hardware": "tpu-v5e"})
+    assert validate_bench_baseline(path) == []
+
+
+def test_mesh_label_parser():
+    assert parse_mesh_label("data4xmodel2") == [("data", 4), ("model", 2)]
+    assert parse_mesh_label("model8") == [("model", 8)]
+    assert parse_mesh_label("ring4") == [("ring", 4)]   # parses; AR003 later
+    assert parse_mesh_label("4data") is None
+    assert parse_mesh_label("") is None
+    assert parse_mesh_label("dataxmodel") is None
+
+
+# ---------------------------------------------------------------------------
+# the live gate: the repo itself must satisfy its committed baseline
+# ---------------------------------------------------------------------------
+
+def test_repo_lint_matches_committed_baseline():
+    graph = CallGraph(REPO_ROOT)
+    findings = PurityChecker(graph).run()
+    errors = [f for f in findings if f.severity == SEV_ERROR]
+    new, _fixed = ratchet(errors, load_baseline())
+    assert new == [], "new lint errors beyond tests/analysis_baseline.json:" \
+        "\n" + "\n".join(f.render() for f in new)

@@ -1,0 +1,86 @@
+"""Recompile-count regression tests — the dynamic complement of the static
+trace-purity lint (``scripts/analyze.py lint``).
+
+The static checks prove nothing syncs *inside* a trace; these prove the
+engine's bucketing policy keeps the number of traces themselves bounded.
+Every distinct (plen bucket, width bucket) pair costs one XLA compile; if
+bucketing regressed to per-exact-length shapes, steady-state serving would
+recompile per request — the exact pathology PR 2 removed.  jit's
+compilation-cache counter (``jitted._cache_size()``) is the ground truth:
+it counts compiled variants, not calls.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serve.engine import _bucket_len
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+    cfg = ARCHITECTURES["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_batch=4, max_len=64))
+    return cfg, eng
+
+
+def _gen(eng, cfg, lengths, new_tokens):
+    prompts = [[(3 * i + j) % cfg.vocab_size for j in range(n)]
+               for i, n in enumerate(lengths)]
+    return eng.generate(prompts, new_tokens)
+
+
+def test_prefill_compiles_bounded_by_plen_buckets(engine_setup):
+    cfg, eng = engine_setup
+    # lengths spanning two plen buckets (<=8 -> 8, 9..16 -> 16), one width
+    _gen(eng, cfg, [3, 5], 4)
+    _gen(eng, cfg, [12, 14], 4)
+    _gen(eng, cfg, [4, 15], 4)
+    buckets = eng.stats()["prefill_plen_buckets"]
+    assert buckets == [8, 16]
+    assert eng._prefill._cache_size() <= len(buckets), (
+        f"{eng._prefill._cache_size()} prefill compiles for "
+        f"{len(buckets)} plen buckets — bucketing is leaking shapes")
+
+
+def test_decode_loop_compiles_bounded_by_width_buckets(engine_setup):
+    cfg, eng = engine_setup
+    # max_new_tokens 4 and 7 share the width-8 bucket; 12 opens width 16
+    _gen(eng, cfg, [3], 4)
+    _gen(eng, cfg, [3], 7)
+    _gen(eng, cfg, [3], 12)
+    widths = {_bucket_len(4), _bucket_len(7), _bucket_len(12)}
+    assert widths == {8, 16}
+    assert eng._loop is not None
+    assert eng._loop._cache_size() <= len(widths), (
+        f"{eng._loop._cache_size()} loop compiles for width buckets "
+        f"{sorted(widths)} — (width, unroll) signature is leaking")
+
+
+def test_steady_state_adds_no_compiles(engine_setup):
+    """Repeating previously-seen shapes must hit the jit cache exactly."""
+    cfg, eng = engine_setup
+    out1 = _gen(eng, cfg, [3, 12], 4)
+    before = (eng._prefill._cache_size(), eng._loop._cache_size())
+    out2 = _gen(eng, cfg, [3, 12], 4)
+    after = (eng._prefill._cache_size(), eng._loop._cache_size())
+    assert after == before, (
+        f"steady-state generate recompiled: {before} -> {after}")
+    assert out1 == out2
+
+
+def test_cache_counter_is_live():
+    """Guard the guard: _cache_size must actually count compilations, or
+    the bounds above would vacuously pass on a broken counter."""
+    calls = jax.jit(lambda x: x + 1)
+    assert calls._cache_size() == 0
+    calls(jnp.zeros((2,)))
+    assert calls._cache_size() == 1
+    calls(jnp.zeros((2,)))           # cache hit
+    assert calls._cache_size() == 1
+    calls(jnp.zeros((3,)))           # new shape -> new compile
+    assert calls._cache_size() == 2
