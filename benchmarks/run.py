@@ -21,7 +21,8 @@ import sys
 import traceback
 
 SUITES = ["gemm_tuning", "attention_tuning", "gemm_scaling", "relative_peak",
-          "ratio_model", "model_step", "roofline_summary", "serving"]
+          "ratio_model", "model_step", "roofline_summary", "serving",
+          "serving_sustained"]
 
 
 def _run_suite(suite: str, smoke: bool, hardware=None, mesh=None):

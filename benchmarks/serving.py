@@ -65,9 +65,13 @@ def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
     prompts = [[(7 * i + j) % cfg.vocab_size for j in range(plen)]
                for i in range(batch)]
 
+    # This suite isolates the fused-loop-vs-per-token-sync claim, so it pins
+    # the wave scheduler; benchmarks/serving_sustained.py carries the
+    # continuous-vs-wave comparison.
     eng = Engine(model, params,
                  ServeConfig(max_batch=batch, max_len=256, profile=True,
-                             hardware=hardware, mesh=mesh))
+                             hardware=hardware, mesh=mesh,
+                             scheduler="wave"))
     # The sync baseline runs on the SAME topology as the fused engine, so
     # the headline ratio isolates the execution model (per-token host syncs
     # vs one device-resident loop) at fixed placement.  Off-mesh, mesh=None

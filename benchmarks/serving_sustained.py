@@ -1,0 +1,125 @@
+"""Sustained serving throughput: continuous batching vs wave scheduling.
+
+The wave engine holds a finished row's slot until every request in its wave
+exhausts its budget, so a mixed workload pays for the *longest* budget per
+wave; the continuous engine evicts at chunk boundaries and refills the slot
+from the queue, so it pays roughly for the *sum* of work.  This suite drives
+both schedulers through the SAME saturated open-queue workload — a seeded
+Poisson mix of prompt lengths and decode budgets, every request enqueued via
+``submit()`` before one ``run()`` drains the backlog (the arrival process
+stays saturated throughout, which is the regime where scheduling policy
+matters) — and reports:
+
+  * sustained tokens/s for the wave engine,
+  * sustained tokens/s for the continuous engine,
+  * their ratio (the headline row — CI gates it with
+    ``--require-improvement``: continuous must beat wave),
+  * paged-cache provenance (tuned page size + source, pool utilization).
+
+``run(smoke=True)`` shrinks the workload for the CI fast tier.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs.catalog import get_config
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig
+
+ARCH = "llama3.2-1b"
+SEED = 1234
+
+
+def _workload(n_requests: int, vocab: int, max_len: int):
+    """Seeded request mix: Poisson prompt lengths, heavy-tailed budgets
+    (3/4 short chat turns, 1/4 long completions).
+
+    Budget variance is the point of the comparison — a wave pays its max
+    member budget for every slot it holds, continuous pays each row only
+    its own and refills the slot from the queue.
+    """
+    rng = np.random.RandomState(SEED)
+    plens = np.clip(rng.poisson(6, n_requests), 2, 8)
+    budgets = np.where(rng.rand(n_requests) < 0.25,
+                       rng.randint(40, 49, n_requests),
+                       rng.randint(3, 9, n_requests))
+    prompts = [[int(t) for t in rng.randint(1, vocab, p)] for p in plens]
+    return prompts, [int(b) for b in budgets]
+
+
+def _drain(eng: Engine, prompts, budgets) -> float:
+    t0 = time.perf_counter()
+    for p, b in zip(prompts, budgets):
+        eng.submit(p, b)
+    eng.run()
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = False, hardware=None, mesh=None) -> List[tuple]:
+    slots = 4
+    max_len = 128
+    n_requests = 16 if smoke else 32
+    repeats = 3 if smoke else 4
+
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts, budgets = _workload(n_requests, cfg.vocab_size, max_len)
+    total_new = sum(budgets)
+
+    # chunk 16: boundary work (view gather/scatter, admission dispatch) is
+    # amortized over twice the tokens of the default, while slots still
+    # refill an order of magnitude faster than a wave turns over
+    cont = Engine(model, params,
+                  ServeConfig(max_batch=slots, max_len=max_len,
+                              hardware=hardware, mesh=mesh,
+                              decode_chunk=16))
+    wave = Engine(model, params,
+                  ServeConfig(max_batch=slots, max_len=max_len,
+                              hardware=hardware, mesh=mesh,
+                              scheduler="wave"))
+    # Warmup drains compile every (plen, width) bucket the workload touches;
+    # the measured repeats below are steady-state scheduling only.
+    _drain(cont, prompts, budgets)
+    _drain(wave, prompts, budgets)
+
+    # Interleave the engines round-robin so both see the same machine drift,
+    # and keep each engine's fastest drain (same policy as benchmarks/
+    # serving.py).
+    best_cont = best_wave = float("inf")
+    for _ in range(repeats):
+        best_cont = min(best_cont, _drain(cont, prompts, budgets))
+        best_wave = min(best_wave, _drain(wave, prompts, budgets))
+
+    # EOS-free greedy decode: every request emits its full budget, so both
+    # engines moved exactly ``total_new`` tokens per drain.
+    cont_tok_s = total_new / max(best_cont, 1e-9)
+    wave_tok_s = total_new / max(best_wave, 1e-9)
+    speedup = cont_tok_s / max(wave_tok_s, 1e-9)
+
+    st = cont.stats()
+    pages = st.get("pages") or {}
+    return [
+        (f"serving_sustained/{ARCH}/hardware/{st['hardware']}", 0.0, 1.0),
+        (f"serving_sustained/{ARCH}/workload/n{n_requests}xS{slots}",
+         0.0, float(total_new)),
+        (f"serving_sustained/{ARCH}/decode_wave_tok_s/N{total_new}",
+         best_wave / total_new * 1e6, wave_tok_s),
+        (f"serving_sustained/{ARCH}/decode_continuous_tok_s/N{total_new}",
+         best_cont / total_new * 1e6, cont_tok_s),
+        (f"serving_sustained/{ARCH}/"
+         f"sustained_speedup_continuous_vs_wave-{speedup:.2f}x",
+         0.0, speedup),
+        (f"serving_sustained/{ARCH}/page_size/p{st['page_size']}/"
+         f"{st['page_size_source']}", 0.0, float(st["page_size"] or 0)),
+        (f"serving_sustained/{ARCH}/page_high_water/"
+         f"{pages.get('high_water_pages', 0)}of{pages.get('usable_pages', 0)}",
+         0.0, float(pages.get("high_water_pages", 0))),
+        (f"serving_sustained/{ARCH}/sched_events/"
+         f"a{st['admissions']}e{st['evictions']}p{st['preemptions']}",
+         0.0, float(st["admissions"])),
+    ]

@@ -58,6 +58,7 @@ _VOLATILE = [
     (re.compile(r"/\d+x\d+(x\d+)?$"), "/cfg"),    # trailing tile/block label
     (re.compile(r"/\d+shapes/[^/]+$"), "/shapes"),  # lookup-provenance row
     (re.compile(r"/u\d+/[^/]+$"), "/unroll"),       # decode_unroll/u4/heuristic
+    (re.compile(r"/p\d+/[^/]+$"), "/page"),         # page_size/p16/tuned:exact
 ]
 
 
@@ -105,6 +106,7 @@ DEFAULT_TOLERANCES = {
     "gemm_scaling/host-xla": 0.90,
     "relative_peak/host-xla": 0.90,
     "serving/": 0.80,
+    "serving_sustained/": 0.80,
 }
 
 

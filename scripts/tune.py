@@ -37,7 +37,8 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import tuner, tuning_db  # noqa: E402
 from repro.core.hardware import get_profile, resolve_hardware  # noqa: E402
-from repro.core.registry import OP_FLASH_ATTENTION, OP_GEMM  # noqa: E402
+from repro.core.registry import (  # noqa: E402
+    OP_FLASH_ATTENTION, OP_GEMM, OP_PAGED_ATTN)
 from repro.core.tile_config import (  # noqa: E402
     FLASH_INTERPRET_SPACE, INTERPRET_SPACE)
 
@@ -68,6 +69,10 @@ DEFAULT_FLASH_SHAPES = [
     (8192, 8192, 128),       # long-prefill rows
 ]
 DEFAULT_FLASH_MEASURE_SHAPES = [(64, 64, 16), (128, 128, 32)]
+# Paged-KV default problems: (max_batch, max_len) — the serve engine's
+# pool-capacity lookup key, mirroring decode_loop.
+DEFAULT_PAGED_SHAPES = [(4, 256), (8, 256), (8, 512), (16, 1024)]
+DEFAULT_PAGED_MEASURE_SHAPES = [(4, 64), (8, 256)]
 DTYPES = {"bfloat16": jnp.bfloat16, "bf16": jnp.bfloat16,
           "float32": jnp.float32, "f32": jnp.float32}
 
@@ -76,12 +81,14 @@ def _parse_shapes(text):
     shapes = []
     for part in text.split(","):
         try:
-            m, k, n = (int(x) for x in part.lower().split("x"))
+            dims = tuple(int(x) for x in part.lower().split("x"))
         except ValueError:
+            dims = ()
+        if len(dims) not in (2, 3):
             raise SystemExit(
                 f"error: bad --shapes entry {part!r}; expected MxKxN "
-                f"(e.g. 4096x4096x4096)")
-        shapes.append((m, k, n))
+                f"(e.g. 4096x4096x4096) or BxL for paged_attn (e.g. 8x512)")
+        shapes.append(dims)
     return shapes
 
 
@@ -112,6 +119,11 @@ def _sweep_one_op(op, hw, shapes, dtypes, args):
                     search=args.search, top_k=args.top_k,
                     space=INTERPRET_SPACE if args.mode == "measure" else None,
                     repeats=args.repeats, record=False)
+            elif op == OP_PAGED_ATTN:
+                b, max_len = shape
+                res = tuner.sweep_paged_attention(
+                    b, max_len, dtype=dtype, hardware=hw, mode=args.mode,
+                    repeats=args.repeats, record=False)
             else:
                 sq, skv, d = shape
                 res = tuner.sweep_flash_attention(
@@ -132,7 +144,8 @@ def _sweep_one_op(op, hw, shapes, dtypes, args):
 
 def cmd_sweep(args) -> int:
     hw = get_profile(_resolve_hw(args))
-    ops = [OP_GEMM, OP_FLASH_ATTENTION] if args.op == "all" else [args.op]
+    ops = ([OP_GEMM, OP_FLASH_ATTENTION, OP_PAGED_ATTN]
+           if args.op == "all" else [args.op])
     if args.shapes and len(ops) > 1:
         raise SystemExit("error: --shapes requires a single --op")
     dtypes = [args.dtype] if args.dtype else ["bfloat16", "float32"]
@@ -148,8 +161,14 @@ def cmd_sweep(args) -> int:
             shapes = _parse_shapes(args.shapes)
         elif args.mode == "measure":
             # wall-clock sweeps need host-sized problems unless overridden
-            shapes = ([(64, 64, 64), (128, 128, 128), (256, 256, 256)]
-                      if op == OP_GEMM else DEFAULT_FLASH_MEASURE_SHAPES)
+            if op == OP_GEMM:
+                shapes = [(64, 64, 64), (128, 128, 128), (256, 256, 256)]
+            elif op == OP_PAGED_ATTN:
+                shapes = DEFAULT_PAGED_MEASURE_SHAPES
+            else:
+                shapes = DEFAULT_FLASH_MEASURE_SHAPES
+        elif op == OP_PAGED_ATTN:
+            shapes = DEFAULT_PAGED_SHAPES
         else:
             shapes = DEFAULT_SHAPES if op == OP_GEMM else DEFAULT_FLASH_SHAPES
         results += _sweep_one_op(op, hw, shapes, dtypes, args)
@@ -186,6 +205,10 @@ def cmd_diff(args) -> int:
                   search=args.search, top_k=args.top_k, record=False)
         if rec.op == OP_GEMM:
             res = tuner.sweep_gemm(rec.m, rec.k, rec.n, **kw)
+        elif rec.op == OP_PAGED_ATTN:
+            res = tuner.sweep_paged_attention(
+                *rec.shape, dtype=DTYPES[rec.dtype], hardware=hw,
+                mode="model", record=False)
         else:
             res = tuner.sweep_flash_attention(*rec.shape, **kw)
         new = res.best.config
@@ -279,10 +302,12 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("sweep", help="tune problems and update the DB")
     common(p)
-    p.add_argument("--op", choices=[OP_GEMM, OP_FLASH_ATTENTION, "all"],
+    p.add_argument("--op",
+                   choices=[OP_GEMM, OP_FLASH_ATTENTION, OP_PAGED_ATTN,
+                            "all"],
                    default=OP_GEMM,
                    help="kernel family to tune (shapes: gemm=MxKxN, "
-                        "flash_attention=SQxSKVxD)")
+                        "flash_attention=SQxSKVxD, paged_attn=BxL)")
     p.add_argument("--mode", choices=["model", "measure"], default="model")
     p.add_argument("--search", choices=[tuner.SEARCH_GUIDED,
                                         tuner.SEARCH_EXHAUSTIVE],

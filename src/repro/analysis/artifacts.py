@@ -46,8 +46,9 @@ import jax.numpy as jnp
 from repro.analysis.findings import Finding, SEV_ERROR, SEV_WARNING
 from repro.core.hardware import find_profile
 from repro.core.registry import (OP_DECODE_LOOP, OP_FLASH_ATTENTION,
-                                 OP_GEMM)
-from repro.core.tile_config import DecodeLoopTuningSpace
+                                 OP_GEMM, OP_PAGED_ATTN)
+from repro.core.tile_config import (DecodeLoopTuningSpace,
+                                    PagedAttentionTuningSpace)
 from repro.core.tuning_db import TuningDB, TuningDBError
 from repro.launch.mesh import MESH_AXES
 
@@ -170,6 +171,17 @@ def validate_tuning_db(path: str, rel: Optional[str] = None
             if not all(_is_pow2(x) for x in rec.shape):
                 flag("AR004", SEV_WARNING, scope,
                      f"decode shape {rec.shape} is not power-of-two "
+                     f"bucketed — stale key, never hit by a lookup")
+        elif rec.op == OP_PAGED_ATTN:
+            page = rec.block[0]
+            space = tuple(PagedAttentionTuningSpace().page_candidates)
+            if page not in space:
+                flag("AR004", SEV_WARNING, scope,
+                     f"page_size {page} outside the paged-KV tuning space "
+                     f"{space} — stale entry")
+            if not all(_is_pow2(x) for x in rec.shape):
+                flag("AR004", SEV_WARNING, scope,
+                     f"paged-KV shape {rec.shape} is not power-of-two "
                      f"bucketed — stale key, never hit by a lookup")
 
         if rec.mesh is not None:
@@ -302,6 +314,7 @@ def partition_stale(db: TuningDB) -> Tuple[List, List]:
     prunable set `tune.py verify --prune` rewrites the file without."""
     live, stale = [], []
     decode_space = tuple(DecodeLoopTuningSpace().unroll_candidates)
+    paged_space = tuple(PagedAttentionTuningSpace().page_candidates)
     for rec in db.records():
         bad = False
         try:
@@ -313,6 +326,10 @@ def partition_stale(db: TuningDB) -> Tuple[List, List]:
             bad = True
         if rec.op == OP_DECODE_LOOP and (
                 rec.block[0] not in decode_space
+                or not all(_is_pow2(x) for x in rec.shape)):
+            bad = True
+        if rec.op == OP_PAGED_ATTN and (
+                rec.block[0] not in paged_space
                 or not all(_is_pow2(x) for x in rec.shape)):
             bad = True
         (stale if bad else live).append(rec)

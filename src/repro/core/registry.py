@@ -51,15 +51,17 @@ import jax.numpy as jnp
 
 from repro.core import hardware as hw
 from repro.core.tile_config import (DecodeLoopConfig, FlashAttentionConfig,
-                                    TileConfig)
+                                    PagedAttentionConfig, TileConfig)
 
 #: op names — the kernel families the tuning framework knows about
 OP_GEMM = "gemm"
 OP_FLASH_ATTENTION = "flash_attention"
 OP_DECODE_LOOP = "decode_loop"
-KNOWN_OPS = (OP_GEMM, OP_FLASH_ATTENTION, OP_DECODE_LOOP)
+OP_PAGED_ATTN = "paged_attn"
+KNOWN_OPS = (OP_GEMM, OP_FLASH_ATTENTION, OP_DECODE_LOOP, OP_PAGED_ATTN)
 
-AnyConfig = Union[TileConfig, FlashAttentionConfig, DecodeLoopConfig]
+AnyConfig = Union[TileConfig, FlashAttentionConfig, DecodeLoopConfig,
+                  PagedAttentionConfig]
 
 
 def mesh_hardware_key(hardware: str, mesh: Optional[str]) -> str:
@@ -84,6 +86,7 @@ _FALLBACK: Dict[str, AnyConfig] = {
     OP_GEMM: TileConfig(128, 128, 128),
     OP_FLASH_ATTENTION: FlashAttentionConfig(128, 128),
     OP_DECODE_LOOP: DecodeLoopConfig(1),
+    OP_PAGED_ATTN: PagedAttentionConfig(16),
 }
 
 #: hardware names already warned about (once-per-process, tests reset it)
@@ -119,14 +122,16 @@ def _seeded_default(op: str, hardware: str) -> Tuple[Optional[AnyConfig], str]:
 
 #: per-op config class — used to rebuild configs from persisted block tuples
 CONFIG_CLASS = {OP_GEMM: TileConfig, OP_FLASH_ATTENTION: FlashAttentionConfig,
-                OP_DECODE_LOOP: DecodeLoopConfig}
+                OP_DECODE_LOOP: DecodeLoopConfig,
+                OP_PAGED_ATTN: PagedAttentionConfig}
 
 #: length of each op's problem-shape tuple: gemm (m, k, n); flash
-#: (sq, skv, head_dim); decode_loop (max_batch, max_len).  The block-tuple
-#: length is derived from the config class's fields — together with
-#: CONFIG_CLASS/_DEFAULTS/_FALLBACK this is the one place to extend when
-#: adding an op.
-OP_SHAPE_LEN = {OP_GEMM: 3, OP_FLASH_ATTENTION: 3, OP_DECODE_LOOP: 2}
+#: (sq, skv, head_dim); decode_loop and paged_attn (max_batch, max_len).
+#: The block-tuple length is derived from the config class's fields —
+#: together with CONFIG_CLASS/_DEFAULTS/_FALLBACK this is the one place to
+#: extend when adding an op.
+OP_SHAPE_LEN = {OP_GEMM: 3, OP_FLASH_ATTENTION: 3, OP_DECODE_LOOP: 2,
+                OP_PAGED_ATTN: 2}
 OP_BLOCK_LEN = {op: len(dataclasses.fields(cls))
                 for op, cls in CONFIG_CLASS.items()}
 

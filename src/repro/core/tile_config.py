@@ -252,3 +252,39 @@ class DecodeLoopTuningSpace:
             if width is not None and u > width:
                 continue
             yield DecodeLoopConfig(unroll=u)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (op = "paged_attn")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, order=True)
+class PagedAttentionConfig:
+    """Layout knob of the serve engine's paged KV cache.
+
+    ``page_size`` is how many tokens one KV page holds.  Small pages cut
+    fragmentation (a request wastes at most ``page_size - 1`` tokens of its
+    last page) and let admission pack tighter; big pages keep the per-chunk
+    gather/scatter index streams short and the pool's flat-token reads more
+    contiguous.  Like ``decode_loop``, the best value depends on hardware
+    AND topology, so tuned entries may carry a mesh label in the op key.
+    """
+    page_size: int = 16
+
+    @property
+    def label(self) -> str:
+        return f"p{self.page_size}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedAttentionTuningSpace:
+    """Candidate page sizes for the paged-KV sweep (powers of two, so pages
+    tile the power-of-two decode-width buckets evenly)."""
+    page_candidates: Sequence[int] = (8, 16, 32, 64)
+
+    def candidates(self, hw: HardwareSpec = TPU_V5E,
+                   max_len: int = None) -> Iterator[PagedAttentionConfig]:
+        for p in self.page_candidates:
+            if max_len is not None and p > max_len:
+                continue
+            yield PagedAttentionConfig(page_size=p)

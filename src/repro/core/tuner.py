@@ -41,9 +41,10 @@ from repro.core import cost_model
 from repro.core.hardware import (HardwareSpec, TPU_V5E, HOST_CPU,
                                  resolve_profile)
 from repro.core.registry import (GLOBAL_REGISTRY, OP_FLASH_ATTENTION, OP_GEMM,
-                                 TileRegistry)
+                                 OP_PAGED_ATTN, TileRegistry)
 from repro.core.tile_config import (FlashAttentionConfig, FlashTuningSpace,
-                                    TileConfig, TuningSpace)
+                                    PagedAttentionTuningSpace, TileConfig,
+                                    TuningSpace)
 from repro.kernels import ops
 
 SEARCH_GUIDED = "guided"
@@ -275,6 +276,100 @@ def sweep_flash_attention(
         reg = registry or GLOBAL_REGISTRY
         reg.put_op(OP_FLASH_ATTENTION, result.best.config, hardware.name,
                    dtype, (sq, skv, d))
+    return result
+
+
+def sweep_paged_attention(
+    max_batch: int, max_len: int,
+    *,
+    dtype=jnp.float32,
+    space: Optional[PagedAttentionTuningSpace] = None,
+    hardware: HardwareSpec = TPU_V5E,
+    mode: str = "model",
+    repeats: int = 3,
+    kv_heads: int = 4,
+    head_dim: int = 16,
+    registry: Optional[TileRegistry] = None,
+    record: bool = True,
+    mesh: Optional[str] = None,
+) -> SweepResult:
+    """Tune the paged-KV ``page_size`` for one serve-pool problem.
+
+    The problem is identified by ``(max_batch, max_len)`` — the engine's
+    lookup key, mirroring ``decode_loop``.  ``mode="measure"`` times one
+    decode chunk's full data-movement path per candidate: host block-table +
+    index computation (which scales with the page count) followed by the
+    device gather/scatter roundtrip (:mod:`repro.kernels.paged`).
+    ``mode="model"`` ranks candidates analytically: per-chunk index/block
+    overhead falls as ``1/page_size`` while last-page fragmentation grows
+    with it, giving an interior optimum without hardware.
+    """
+    if mode not in ("model", "measure"):
+        raise ValueError(f"unknown mode {mode!r}")
+    hardware = resolve_profile(hardware)
+    space = space or PagedAttentionTuningSpace()
+    cands = list(space.candidates(hardware, max_len=max_len))
+    if not cands:
+        raise ValueError(
+            f"paged-KV tuning space empty for ({max_batch},{max_len}) "
+            f"on {hardware.name}")
+
+    tokens = float(max_batch * max_len)
+
+    def model_cost(page_size: int) -> float:
+        # block-table entries touched per chunk ~ tokens/page; expected
+        # last-page slack ~ (page-1)/2 per row widens the working pool
+        overhead = tokens / page_size
+        waste = max_batch * (page_size - 1) / 2.0
+        return (tokens + 4.0 * overhead + 2.0 * waste) * 1e-9
+
+    points: List[SweepPoint] = []
+    if mode == "model":
+        for cfg in cands:
+            points.append(SweepPoint(cfg, model_cost(cfg.page_size), 0.0,
+                                     "model"))
+    else:
+        import numpy as np
+
+        from repro.kernels.paged import paged_gather, paged_scatter
+        from repro.serve import kv_pages
+
+        chunk = 8
+        width = min(64, max_len)
+        for cfg in cands:
+            p = cfg.page_size
+            alloc = kv_pages.PageAllocator(max_batch * max_len, p)
+            sched = kv_pages.ContinuousScheduler(max_batch, alloc)
+            rng = np.random.default_rng(0)
+            for rid in range(max_batch):
+                sched.admit(rid, int(rng.integers(1, width - chunk + 1)),
+                            budget=chunk)
+            sched.ensure_chunk_pages(chunk)
+            pool = jnp.zeros((2, alloc.num_pages * p, kv_heads, head_dim),
+                             dtype)
+            cols = jnp.ones((2, max_batch, chunk, kv_heads, head_dim), dtype)
+
+            def step(pool, cols, p=p, sched=sched):
+                gidx = kv_pages.gather_indices(sched.rows, max_batch, width,
+                                               chunk, p)
+                sidx = kv_pages.scatter_indices(sched.rows, max_batch, chunk,
+                                                p)
+                view = paged_gather(pool, jnp.asarray(gidx))
+                return paged_scatter(pool, jnp.asarray(sidx), cols) \
+                    + view.sum()
+            secs, _ = _measure(lambda: step(pool, cols), repeats)
+            points.append(SweepPoint(cfg, secs, 0.0, "measure"))
+
+    result = SweepResult(shape=(max_batch, max_len), op=OP_PAGED_ATTN,
+                         dtype=jnp.dtype(dtype).name,
+                         hardware=hardware.name, points=points,
+                         search=SEARCH_EXHAUSTIVE,
+                         candidates_total=len(cands), evaluated=len(points),
+                         pruned=0)
+    if record:
+        reg = registry or GLOBAL_REGISTRY
+        reg.put_op(OP_PAGED_ATTN, result.best.config, hardware.name, dtype,
+                   (max_batch, max_len), mesh=mesh)
     return result
 
 

@@ -3,3 +3,6 @@ from repro.kernels.ops import (  # noqa: F401
     BACKEND_PALLAS_INTERPRET, BACKEND_PALLAS_TPU, BACKEND_REF, BACKEND_XLA,
     BACKENDS, batched_gemm, gemm,
 )
+from repro.kernels.paged import (  # noqa: F401
+    flatten_pool, paged_gather, paged_scatter,
+)

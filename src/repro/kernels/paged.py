@@ -1,0 +1,76 @@
+"""Paged KV-cache gather/scatter — the data-movement op behind paged
+attention (op = ``paged_attn`` in the tuning DB).
+
+The paged pool stores each "self"-attention KV leaf with its batch and
+sequence dims collapsed into one flat token axis of ``num_pages *
+page_size`` entries; a request's logically-contiguous KV lives wherever its
+block table says.  The serve engine's fused decode chunk then needs exactly
+two data movements per chunk:
+
+* :func:`paged_gather` — materialize a dense, right-aligned ``(B, W)`` view
+  of every live row's KV from the flat pool (the attention kernels consume
+  the view unchanged, which is what keeps the model source single-source:
+  the paged layout is invisible above this op);
+* :func:`paged_scatter` — write the chunk's freshly-decoded KV columns back
+  to their block-table homes.
+
+Both are one XLA gather/scatter on the flat token axis — index arrays come
+precomputed from the host block tables (``repro.serve.kv_pages``), so the
+jitted chunk never sees a page table, only flat ``int32`` indices.  The
+tuned ``page_size`` is a pure *layout* parameter: it shapes the index
+streams and the pool's memory granularity without changing this op's code —
+the paper's thesis (tuning knobs outside the kernel) applied to memory
+layout rather than a compute tile.
+
+Out-of-range behavior is load-bearing: gathers of the NULL page read zeros
+(masked by attention), scatters aimed at slot indices ``>= B`` are dropped
+by JAX's default out-of-bounds scatter mode (used for admission's dummy
+rows), and TRASH-page writes may collide freely because nothing reads them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flatten_pool(leaf: jnp.ndarray) -> jnp.ndarray:
+    """Collapse a pool leaf's (num_pages, page_size) dims into the flat
+    token axis the gather/scatter ops index: (..., P, S, kvh, hd) ->
+    (..., P*S, kvh, hd)."""
+    shape = leaf.shape
+    return leaf.reshape(shape[:-4] + (shape[-4] * shape[-3],) + shape[-2:])
+
+
+def paged_gather(pool_flat: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather a dense KV view from the flat pool.
+
+    Args:
+      pool_flat: ``(..., num_pages * page_size, kvh, hd)`` pool leaf.
+      idx: ``(B, W)`` int32 flat token indices (0 = the NULL page's zeros).
+
+    Returns:
+      ``(..., B, W, kvh, hd)`` dense view, batch dim at axis -4 — the same
+      layout ``model.init_cache`` gives a contiguous cache leaf.
+    """
+    # take on the token axis: (..., B*W, kvh, hd) -> split back to (B, W)
+    flat = jnp.take(pool_flat, idx.reshape(-1), axis=-3)
+    lead = pool_flat.shape[:-3]
+    return flat.reshape(lead + idx.shape + pool_flat.shape[-2:])
+
+
+def paged_scatter(pool_flat: jnp.ndarray, idx: jnp.ndarray,
+                  cols: jnp.ndarray) -> jnp.ndarray:
+    """Scatter freshly-decoded KV columns back into the flat pool.
+
+    Args:
+      pool_flat: ``(..., num_pages * page_size, kvh, hd)`` pool leaf.
+      idx: ``(B, chunk)`` int32 flat token indices (TRASH-page indices for
+        writes with no allocated home).
+      cols: ``(..., B, chunk, kvh, hd)`` new KV columns (the view's last
+        ``chunk`` columns after the fused loop ran).
+
+    Returns:
+      The updated pool leaf.
+    """
+    lead = pool_flat.shape[:-3]
+    flat_cols = cols.reshape(lead + (-1,) + cols.shape[-2:])
+    return pool_flat.at[..., idx.reshape(-1), :, :].set(flat_cols)

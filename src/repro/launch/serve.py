@@ -37,6 +37,19 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=None,
                     help="KV-cache slots (default: number of prompts)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", choices=["continuous", "wave"],
+                    default="continuous",
+                    help="continuous = paged KV + admit/evict at chunk "
+                         "boundaries (default); wave = slot-per-request")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged-KV page size in tokens (default: tuned "
+                         "paged_attn entry for this hardware/mesh)")
+    ap.add_argument("--capacity-tokens", type=int, default=None,
+                    help="paged-pool capacity in tokens (default: "
+                         "max_batch * max_len)")
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="tokens per fused chunk between scheduling "
+                         "boundaries (power of two)")
     ap.add_argument("--attn-impl", choices=["chunked", "flash"], default=None,
                     help="override the config's attention implementation "
                          "(flash = tuned Pallas kernel for prefill)")
@@ -94,7 +107,11 @@ def main() -> None:
                              temperature=args.temperature,
                              profile=args.stats,
                              hardware=hardware,
-                             mesh=mesh))
+                             mesh=mesh,
+                             scheduler=args.scheduler,
+                             page_size=args.page_size,
+                             capacity_tokens=args.capacity_tokens,
+                             decode_chunk=args.decode_chunk))
     from repro.profiling import trace
     with trace(args.trace_dir, enabled=bool(args.trace_dir)) as session:
         outs = eng.generate(prompts, args.max_new, extra_inputs=extra or None)
@@ -108,10 +125,25 @@ def main() -> None:
         st = eng.stats()
         toks = st["tokens_generated"]
         dec_s = st["decode_seconds"] or 1e-9
+        sched = st["scheduler"]
+        unit = (f"{int(st['chunks'])} chunk(s)" if sched == "continuous"
+                else f"{int(st['waves'])} wave(s)")
+        forced = (f" (forced: {st['scheduler_forced']})"
+                  if st.get("scheduler_forced") else "")
         print(f"[stats] hw={st['hardware']} ({st['hardware_platform']}), "
-              f"{int(toks)} tokens, {int(st['waves'])} wave(s), "
+              f"scheduler={sched}{forced}, {int(toks)} tokens, {unit}, "
               f"{int(st['device_transfers'])} host transfer(s), "
               f"decode {toks / dec_s:.0f} tok/s")
+        if sched == "continuous":
+            pages = st.get("pages") or {}
+            print(f"[stats] paged KV: page_size={st['page_size']} "
+                  f"({st['page_size_source']}), "
+                  f"capacity={st['capacity_tokens']} tokens, high water "
+                  f"{pages.get('high_water_pages', 0)}/"
+                  f"{pages.get('usable_pages', 0)} pages, "
+                  f"admissions={st['admissions']} "
+                  f"evictions={st['evictions']} "
+                  f"preemptions={st['preemptions']}")
         print(f"[stats] mesh={st['mesh']}")
         if st["sharding"]:
             print(f"[stats] sharding rules={st['sharding']['rules']} "

@@ -1,12 +1,26 @@
 """Device-resident continuous-batching serve engine.
 
-Production-shaped serving over a fixed pool of ``max_batch`` KV-cache slots:
+Production-shaped serving over a fixed pool of ``max_batch`` KV-cache slots,
+with two schedulers sharing one model path:
 
-* **Slot scheduler** — requests are admitted into free slots and evicted on
-  completion; the KV cache is allocated once per engine and reused across
-  ``generate`` calls (stale entries are never attended thanks to per-slot
-  ``kv_start``/length masking).  More requests than slots are served in
-  successive waves.
+* **Continuous (default)** — true continuous batching over a *paged* KV
+  cache: capacity is measured in tokens, finished rows are evicted at chunk
+  boundaries mid-decode, and queued requests are prefilled and admitted into
+  freed slots without restarting the fused loop.  Each live request holds a
+  block table over fixed-size pages (``page_size`` is the tuned
+  ``paged_attn`` knob); per decode chunk the engine gathers every row's KV
+  into a dense right-aligned view, runs the same fused loop the wave path
+  runs, and scatters the chunk's new KV columns back to their pages — so
+  the model source never sees a page table and token-for-token parity with
+  the wave engine holds by construction.  Host bookkeeping (allocator,
+  block tables, FIFO admission, youngest-first preemption) lives in
+  :mod:`repro.serve.kv_pages`.
+* **Wave (``ServeConfig(scheduler="wave")``)** — requests are admitted into
+  free slots and evicted on completion; the KV cache is allocated once per
+  engine and reused across ``generate`` calls (stale entries are never
+  attended thanks to per-slot ``kv_start``/length masking).  More requests
+  than slots are served in successive waves.  Attention-free (pure SSM) and
+  int8-quantized caches always take this path.
 * **Fused decode loop** — a single ``jax.lax.while_loop`` carries tokens,
   per-slot done flags, per-slot token budgets, EOS checks, the sampling key
   and the KV cache entirely on device.  Exactly ONE ``jax.device_get`` per
@@ -43,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged import paged_gather, paged_scatter
 from repro.models.model import Model
 
 _PLEN_BUCKET_MIN = 8
@@ -85,6 +100,19 @@ class ServeConfig:
     # latency.  None resolves: mesh-keyed tuned entry (decode_loop in the
     # TuningDB, topology in the key) > heuristic (4 on a mesh, 1 alone).
     decode_unroll: Optional[int] = None
+    # "continuous" (paged KV, admit/evict at chunk boundaries) or "wave".
+    # Pure-SSM and int8-KV models silently run "wave" either way.
+    scheduler: str = "continuous"
+    # Paged-KV page size in tokens.  None resolves a tuned ``paged_attn``
+    # entry keyed by (max_batch, max_len) + hardware + mesh label.
+    page_size: Optional[int] = None
+    # Paged-pool capacity in TOKENS (the continuous scheduler's admission
+    # currency).  None = max_batch * max_len — the wave engine's footprint,
+    # now shared by need instead of reserved per slot.
+    capacity_tokens: Optional[int] = None
+    # Tokens decoded per fused chunk between scheduling boundaries
+    # (admission/eviction happen only at boundaries).  Power of two.
+    decode_chunk: int = 8
 
 
 @dataclasses.dataclass
@@ -182,9 +210,43 @@ class Engine:
         self._tile_lookups: Optional[Dict[str, Dict[str, object]]] = None
         self._prefill_flash_lookups: Dict[str, Dict[str, object]] = {}
         self._plen_buckets: set = set()
+        # -- continuous-batching state (paged KV pool) -------------------
+        if cfg.scheduler not in ("continuous", "wave"):
+            raise ValueError(f"unknown scheduler {cfg.scheduler!r}; "
+                             f"expected 'continuous' or 'wave'")
+        chunk = int(cfg.decode_chunk)
+        if chunk < 1 or chunk & (chunk - 1):
+            raise ValueError(
+                f"decode_chunk must be a power of two >= 1, got {chunk}")
+        self._chunk = chunk
+        self._scheduler = cfg.scheduler
+        self._scheduler_forced: Optional[str] = None
+        if cfg.scheduler == "continuous":
+            # The paged pool holds "self"-attention KV; models without one
+            # (pure SSM) or with a quantized {q, s} cache layout keep the
+            # dense wave path — transparently, so callers never branch.
+            if model.cfg.family == "ssm":
+                self._scheduler = "wave"
+                self._scheduler_forced = "no self-attention KV cache"
+            elif model.cfg.kv_quant:
+                self._scheduler = "wave"
+                self._scheduler_forced = "int8-quantized KV cache"
+        self._capacity_tokens = int(cfg.capacity_tokens
+                                    or cfg.max_batch * cfg.max_len)
+        self._page_size: Optional[int] = None
+        self._page_size_source: Optional[str] = None
+        self._alloc = None                # PageAllocator (continuous only)
+        self._csched = None               # ContinuousScheduler
+        self._pools = None                # paged "self" KV leaves (flat)
+        self._fixed = None                # resident non-paged cache leaves
+        self._cur = None                  # (max_batch,) next-token register
+        self._scratch: Dict[int, object] = {}   # admission prefill caches
+        self._chunk_fn = None             # jitted fused chunk (lazily built)
+        self._admit_fn = None             # jitted prefill+insert
         self._stats: Dict[str, float] = {
             "requests": 0, "tokens_generated": 0, "generate_calls": 0,
-            "waves": 0, "device_transfers": 0, "cache_allocs": 0,
+            "waves": 0, "chunks": 0, "admission_prefills": 0,
+            "device_transfers": 0, "cache_allocs": 0,
             "prefill_seconds": 0.0, "decode_seconds": 0.0,
             "total_seconds": 0.0,
         }
@@ -354,10 +416,14 @@ class Engine:
         tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
         off = jax.ShapeDtypeStruct((), jnp.int32)
         ks = jax.ShapeDtypeStruct((b,), jnp.int32)
+        cache = self._cache
+        if cache is None:      # continuous engines never build a dense pool
+            cache = jax.eval_shape(
+                lambda: self.model.init_cache(b, self.cfg.max_len))
         try:
             with capture_gemm_shapes() as shapes:
                 jax.eval_shape(self.model.decode_step, self.params, tok,
-                               self._cache, off, ks)
+                               cache, off, ks)
         except Exception:      # provenance is telemetry, never fatal
             self._tile_lookups = {}
             return
@@ -419,6 +485,210 @@ class Engine:
             "matched_shape": res.matched_shape,
         }
 
+    # -- paged KV pool (continuous scheduler) ----------------------------
+    def _resolve_page_size(self) -> None:
+        """Page size (tokens) for the paged pool: explicit config > tuned
+        ``paged_attn`` entry keyed by (max_batch, max_len) + hardware +
+        mesh label > registry fallback.  Provenance lands in stats()."""
+        if self._page_size is not None:
+            return
+        if self.cfg.page_size is not None:
+            page = max(int(self.cfg.page_size), 1)
+            self._page_size_source = "config"
+        else:
+            from repro.core.registry import GLOBAL_REGISTRY, OP_PAGED_ATTN
+            from repro.launch.mesh import mesh_axis_label
+            res = GLOBAL_REGISTRY.lookup_op(
+                OP_PAGED_ATTN, self.hardware, self.model.cfg.dtype,
+                (self.cfg.max_batch, self.cfg.max_len),
+                mesh=mesh_axis_label(self.mesh))
+            page = max(int(res.config.page_size), 1)
+            self._page_size_source = (
+                f"tuned:{res.source}"
+                if res.source in ("exact", "nearest", "generic")
+                else res.source)
+        self._page_size = min(page, self._capacity_tokens)
+
+    def _ensure_pool(self):
+        """Allocate the paged pool once per engine: flat token-axis buffers
+        for every "self" KV leaf plus a resident tree for the fixed-size
+        leaves (cross-KV, SSM/conv states) that admission row-scatters."""
+        if self._pools is not None:
+            return
+        from repro.serve import kv_pages
+        self._resolve_page_size()
+        self._alloc = kv_pages.PageAllocator(self._capacity_tokens,
+                                             self._page_size)
+        self._csched = kv_pages.ContinuousScheduler(self.cfg.max_batch,
+                                                    self._alloc)
+        npp = self._alloc.num_pages * self._page_size
+        template = self.model.init_cache(self.cfg.max_batch, 1)
+
+        def pool_leaf(leaf):
+            # (lead..., B, 1, kvh, hd) -> (lead..., num_pages*page, kvh, hd)
+            return jnp.zeros(leaf.shape[:-4] + (npp,) + leaf.shape[-2:],
+                             leaf.dtype)
+
+        pools = jax.tree_util.tree_map(pool_leaf, template["self"])
+        fixed = {k: v for k, v in template.items() if k != "self"}
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed import sharding as sh
+            ta = self.rules.tensor_axis
+
+            def pool_sharding(x):
+                # no batch dim on the flat pool: shard KV heads over the
+                # tensor axis when divisible, replicate otherwise
+                spec = [None] * x.ndim
+                if ta and x.shape[-2] % sh.axis_size(self.mesh, ta) == 0:
+                    spec[x.ndim - 2] = ta
+                return NamedSharding(self.mesh, P(*spec))
+
+            pools = jax.device_put(
+                pools, jax.tree_util.tree_map(pool_sharding, pools))
+            if fixed:
+                fixed = jax.device_put(
+                    fixed, sh.cache_shardings(self.mesh, self.rules, fixed))
+        self._pools, self._fixed = pools, fixed
+        self._cur = jnp.zeros((self.cfg.max_batch,), jnp.int32)
+        self._stats["cache_allocs"] += 1
+        self._trace_decode_tiles()
+
+    def _scratch_cache(self, plen: int):
+        """Admission prefill cache for one plen bucket, reused across
+        admissions: prefill fully overwrites its "self" columns [0, plen)
+        and recomputes every fixed leaf, so stale contents never leak."""
+        cache = self._scratch.get(plen)
+        if cache is None:
+            cache = self.model.init_cache(self.cfg.max_batch, plen)
+            if self.mesh is not None:
+                from repro.distributed import sharding as sh
+                cache = jax.device_put(
+                    cache, sh.cache_shardings(self.mesh, self.rules, cache))
+            self._scratch[plen] = cache
+        return cache
+
+    @staticmethod
+    def _scatter_fixed(fixed, new, slot_map):
+        """Row-scatter ``new``'s admitted rows into the resident fixed tree
+        along each leaf's batch dim (kind-aware: cross-KV at -4, SSM state
+        at -4, conv state at -3).  ``slot_map`` pads with an out-of-range
+        index, which JAX gathers clamp and scatters drop."""
+        kinds = {"cross": "kv", "ssm": "ssm", "conv": "conv"}
+
+        def walk(old, upd, kind=None):
+            if isinstance(old, dict):
+                return {k: walk(old[k], upd[k], kinds.get(k, kind))
+                        for k in old}
+            if isinstance(old, (tuple, list)):
+                return type(old)(walk(o, u, kind)
+                                 for o, u in zip(old, upd))
+            bd = old.ndim - (3 if kind == "conv" else 4)
+            o2 = jnp.moveaxis(old, bd, 0)
+            u2 = jnp.moveaxis(upd, bd, 0)
+            return jnp.moveaxis(o2.at[slot_map].set(u2[slot_map]), 0, bd)
+
+        return walk(fixed, new)
+
+    def _build_admit_fn(self):
+        """Jitted admission: one full-batch prefill into the plen-bucket
+        scratch cache, prompt KV scattered to its pages, fixed leaves
+        row-scattered to their slots, first token sampled into ``cur``.
+        Compiles once per plen bucket (shapes carry the key)."""
+        prefill = self.model.prefill
+
+        def admit_fn(params, batch, scratch, pools, fixed, cur, key,
+                     dest_idx, slot_map):
+            logits0, filled = prefill(params, batch, scratch)
+            pools_out = jax.tree_util.tree_map(
+                lambda pool, src: paged_scatter(pool, dest_idx, src),
+                pools, filled["self"])
+            fixed_out = self._scatter_fixed(
+                fixed, {k: filled[k] for k in fixed}, slot_map)
+            # Split BEFORE the first sample (wave-loop key discipline).
+            key, sub = jax.random.split(key)
+            first = self._sample(logits0, sub)
+            cur_out = cur.at[slot_map].set(first[slot_map])
+            return pools_out, fixed_out, cur_out, key
+
+        return jax.jit(self._with_mesh(admit_fn))
+
+    def _build_chunk_fn(self):
+        """Jitted fused decode chunk: gather a dense right-aligned KV view
+        from the paged pool, run the wave-style fused loop for ``chunk``
+        tokens, scatter the chunk's new KV columns back to their pages.
+
+        One deliberate difference from the wave loop: the wave loop skips
+        the *final* advance (nothing reads the last token's KV), while the
+        chunk loop always advances while any row is live — the last emitted
+        token's KV must land in the pool before the next chunk reads it,
+        and the final advance's sample becomes the next chunk's first
+        token (carried device-resident in ``cur``).
+        """
+        decode = self.model.decode_step
+        eos = self.cfg.eos_token
+
+        def chunk_fn(params, pools, fixed, cur, key, gidx, sidx, kv_start,
+                     budget, *, width: int, chunk: int, unroll: int):
+            view = jax.tree_util.tree_map(
+                lambda pool: paged_gather(pool, gidx), pools)
+            cache = dict(fixed)
+            cache["self"] = view
+            b = cur.shape[0]
+            done = budget <= 0                 # empty slots start finished
+            buf = jnp.zeros((b, chunk), jnp.int32)
+            lens = jnp.zeros((b,), jnp.int32)
+
+            def cond(carry):
+                step, cur, done, alldone, buf, lens, cache, offset, key = carry
+                return (step < chunk) & ~alldone
+
+            def body(carry):
+                step, cur, done, alldone, buf, lens, cache, offset, key = carry
+                for _ in range(unroll):
+                    with jax.named_scope("decode_token"):
+                        buf = jax.lax.dynamic_update_slice(
+                            buf, jnp.where(done, 0, cur)[:, None], (0, step))
+                        lens = lens + jnp.where(done, 0, 1).astype(jnp.int32)
+                        if eos is not None:
+                            done = done | (cur == eos)
+                        done = done | (lens >= budget)
+                        alldone = done.all()
+                        step = step + 1
+
+                        def advance(op):
+                            cache, cur, key, offset = op
+                            key, sub = jax.random.split(key)
+                            logits, cache = decode(params, cur[:, None],
+                                                   cache, offset, kv_start)
+                            return (cache, self._sample(logits, sub), key,
+                                    offset + 1)
+
+                        # No `step < chunk` guard here (see docstring): the
+                        # chunk-boundary advance must run while rows live.
+                        cache, cur, key, offset = jax.lax.cond(
+                            ~alldone, advance, lambda op: op,
+                            (cache, cur, key, offset))
+                return (step, cur, done, alldone, buf, lens, cache, offset,
+                        key)
+
+            carry = (jnp.int32(0), cur, done, done.all(), buf, lens, cache,
+                     jnp.int32(width - chunk), key)
+            _, cur, _, _, buf, lens, cache, _, key = jax.lax.while_loop(
+                cond, body, carry)
+            cols = jax.tree_util.tree_map(
+                lambda leaf: jax.lax.slice_in_dim(
+                    leaf, width - chunk, width, axis=leaf.ndim - 3),
+                cache["self"])
+            pools_out = jax.tree_util.tree_map(
+                lambda pool, c: paged_scatter(pool, sidx, c), pools, cols)
+            fixed_out = {k: v for k, v in cache.items() if k != "self"}
+            return pools_out, fixed_out, cur, key, buf, lens
+
+        return jax.jit(self._with_mesh(chunk_fn),
+                       static_argnames=("width", "chunk", "unroll"))
+
     # -- request queue --------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                row: Optional[int] = None) -> int:
@@ -445,8 +715,16 @@ class Engine:
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         # Per-request capacity check at enqueue time: an oversized request
-        # fails fast HERE instead of bricking the wave it lands in later.
-        if len(prompt) + max_new_tokens > self.cfg.max_len:
+        # fails fast HERE instead of bricking the batch it lands in later.
+        # The continuous scheduler's capacity currency is TOKENS in the
+        # paged pool (one request may exceed max_len as long as it fits the
+        # pool); the wave scheduler reserves a max_len-column slot.
+        if self._scheduler == "continuous":
+            if len(prompt) + max_new_tokens > self._capacity_tokens:
+                raise ValueError(
+                    f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) "
+                    f"exceeds capacity_tokens ({self._capacity_tokens})")
+        elif len(prompt) + max_new_tokens > self.cfg.max_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) exceeds "
                 f"max_len ({self.cfg.max_len})")
@@ -486,6 +764,8 @@ class Engine:
         # path's tile lookups (traced inside jit) resolve against the same
         # profile the engine reports in stats().
         with execution_context(hardware=self.hardware):
+            if self._scheduler == "continuous":
+                return self._run_continuous(extra_inputs, key)
             while self._queue:
                 wave = self._pack_wave()
                 key, wave_key = jax.random.split(key)
@@ -518,6 +798,186 @@ class Engine:
                 i += 1
         return wave
 
+    # -- continuous drain: admit/evict at chunk boundaries ----------------
+    def _run_continuous(self, extra_inputs: Optional[Dict[str, jax.Array]],
+                        key: jax.Array) -> Dict[int, List[int]]:
+        """Drain the queue with true continuous batching.
+
+        The loop body is one *chunk boundary*: admit every queue-head
+        request that fits (strict FIFO — the head blocks), grow live block
+        tables for the next chunk (preempting youngest-admitted rows if the
+        pool runs dry; victims requeue at the FRONT with a clean restart),
+        run one fused decode chunk, then evict rows that finished inside
+        it.  Exactly one host transfer per chunk.
+        """
+        if extra_inputs and any(r.row is None for r in self._queue):
+            raise ValueError(
+                "extra_inputs needs every request submitted with row= "
+                "(its index into the extra arrays); generate() does this")
+        self._ensure_pool()
+        results: Dict[int, List[int]] = {}
+        active: Dict[int, _Request] = {}        # slot -> request
+        eos = self.cfg.eos_token
+        try:
+            while self._queue or active:
+                if self._queue:
+                    key = self._admit_batch(active, extra_inputs, key)
+                preempted = self._csched.ensure_chunk_pages(self._chunk)
+                # Requeue victims at the queue front, smallest rid first,
+                # with generated tokens discarded: re-admission restarts
+                # them cleanly (greedy decode makes the restart exact).
+                for row in sorted(preempted, key=lambda r: r.rid,
+                                  reverse=True):
+                    req = active.pop(row.slot)
+                    self._sched.evict(req)
+                    req.tokens = None
+                    self._queue.insert(0, req)
+                if not active:
+                    continue        # preemption freed the pool; re-admit
+                key, buf_h, lens_h = self._run_chunk(key)
+                for slot in list(active):
+                    req = active[slot]
+                    row = self._csched.rows[slot]
+                    n = int(lens_h[slot])
+                    emitted = [int(t) for t in buf_h[slot, :n]]
+                    req.tokens.extend(emitted)
+                    self._stats["tokens_generated"] += n
+                    row.length += n
+                    row.budget_left -= n
+                    if row.budget_left <= 0 or (eos is not None
+                                                and eos in emitted):
+                        results[req.rid] = req.tokens
+                        self._csched.evict(row)
+                        self._sched.evict(req)
+                        del active[slot]
+        except Exception:
+            # Free every live row (pages AND slots) so one bad request
+            # can't brick the pool for the next call.
+            for slot in list(active):
+                req = active.pop(slot)
+                row = self._csched.rows.get(slot)
+                if row is not None:
+                    self._csched.evict(row)
+                self._sched.evict(req)
+            raise
+        return results
+
+    def _admit_batch(self, active: Dict[int, "_Request"],
+                     extra_inputs: Optional[Dict[str, jax.Array]],
+                     key: jax.Array) -> jax.Array:
+        """Admit every queue-head request that fits (slot + prompt pages),
+        then prefill them all in ONE batched call and insert their prompt
+        KV, fixed-leaf rows and first sampled token into the live state."""
+        admitted: List[_Request] = []
+        while self._queue and self._csched.can_admit(
+                len(self._queue[0].prompt)):
+            req = self._queue.pop(0)
+            row = self._csched.admit(req.rid, len(req.prompt), req.max_new)
+            self._sched.admit(req)      # lockstep: same smallest-free slot
+            assert req.slot == row.slot
+            req.tokens = []
+            active[row.slot] = req
+            admitted.append(req)
+        if not admitted:
+            return key
+
+        from repro.serve.kv_pages import TRASH_PAGE
+        cfg = self.cfg
+        b = cfg.max_batch
+        page = self._page_size
+        plen = _bucket_len(max(len(r.prompt) for r in admitted))
+        toks = np.zeros((b, plen), np.int32)
+        kv_start = np.full((b,), plen, np.int32)
+        # Prompt-KV destinations: batch rows not admitted THIS call (and pad
+        # columns of admitted rows) write to the TRASH page; real columns
+        # map straight into the row's block table.
+        dest = np.broadcast_to(TRASH_PAGE * page + np.arange(plen) % page,
+                               (b, plen)).astype(np.int32).copy()
+        for r in admitted:
+            row = self._csched.rows[r.slot]
+            np_prompt = len(r.prompt)
+            toks[r.slot, plen - np_prompt:] = r.prompt
+            kv_start[r.slot] = plen - np_prompt
+            logical = np.arange(np_prompt)
+            pages = np.asarray(row.pages, np.int64)
+            dest[r.slot, plen - np_prompt:] = (
+                pages[logical // page] * page + logical % page)
+        # slot_map pads with the out-of-range index b: JAX clamps it on
+        # gather (the garbage row is immediately discarded) and drops it on
+        # scatter, so non-admitted slots keep their live state untouched.
+        slot_map = np.full((b,), b, np.int32)
+        slot_map[:len(admitted)] = [r.slot for r in admitted]
+
+        batch = {"tokens": jnp.asarray(toks),
+                 "kv_start": jnp.asarray(kv_start)}
+        if extra_inputs:
+            rows = [r.row for r in admitted]
+            slots = [r.slot for r in admitted]
+            for name, arr in extra_inputs.items():
+                padded = jnp.zeros((b,) + arr.shape[1:], arr.dtype)
+                batch[name] = padded.at[jnp.asarray(slots)].set(
+                    jnp.asarray(arr)[jnp.asarray(rows)])
+        batch = self._place_batch(batch)
+        scratch = self._scratch_cache(plen)
+        self._record_prefill_flash_tiles(plen)
+        self._plen_buckets.add(int(plen))
+        if self._admit_fn is None:
+            self._admit_fn = self._build_admit_fn()
+        from repro.profiling import annotate
+        t0 = time.perf_counter()
+        with annotate("serve.prefill_admit"):
+            self._pools, self._fixed, self._cur, key = self._admit_fn(
+                self.params, batch, scratch, self._pools, self._fixed,
+                self._cur, key, jnp.asarray(dest), jnp.asarray(slot_map))
+            if cfg.profile:
+                # deliberate sync: profile mode wants the true prefill /
+                # decode wall-time split, not dispatch-pipeline overlap
+                jax.block_until_ready(self._cur)   # analysis: allow(TP001)
+        self._stats["prefill_seconds"] += time.perf_counter() - t0
+        self._stats["admission_prefills"] += 1
+        return key
+
+    def _run_chunk(self, key: jax.Array):
+        """One fused decode chunk over every live row; returns the updated
+        key plus the host copies of the chunk's token buffer and counts
+        (the chunk's single device transfer)."""
+        from repro.serve.kv_pages import gather_indices, scatter_indices
+        rows = self._csched.rows
+        b = self.cfg.max_batch
+        chunk = self._chunk
+        page = self._page_size
+        width = _bucket_len(max(r.length for r in rows.values()) + chunk)
+        gidx = gather_indices(rows, b, width, chunk, page)
+        sidx = scatter_indices(rows, b, chunk, page)
+        kv_start = np.full((b,), width - chunk, np.int32)
+        budget = np.zeros((b,), np.int32)
+        for slot, row in rows.items():
+            kv_start[slot] = width - chunk - row.length
+            budget[slot] = row.budget_left
+        if self._chunk_fn is None:
+            self._chunk_fn = self._build_chunk_fn()
+        # The fused loop advances in ``unroll``-token strides; clamp to a
+        # divisor of the chunk so the final stride can't overshoot the
+        # token buffer (a clamped dynamic_update_slice would silently
+        # rewrite the last column).
+        unroll = min(self._resolve_unroll(), chunk)
+        while chunk % unroll:
+            unroll -= 1
+        from repro.profiling import annotate
+        t0 = time.perf_counter()
+        with annotate("serve.decode_chunk"):
+            (self._pools, self._fixed, self._cur, key, buf,
+             lens) = self._chunk_fn(
+                self.params, self._pools, self._fixed, self._cur, key,
+                jnp.asarray(gidx), jnp.asarray(sidx), jnp.asarray(kv_start),
+                jnp.asarray(budget), width=width, chunk=chunk, unroll=unroll)
+            # The ONE host transfer of this chunk.
+            buf_h, lens_h = jax.device_get((buf, lens))  # analysis: allow(TP001)
+        self._stats["decode_seconds"] += time.perf_counter() - t0
+        self._stats["device_transfers"] += 1
+        self._stats["chunks"] += 1
+        return key, buf_h, lens_h
+
     # -- batched generation ---------------------------------------------
     def generate(self, prompts: List[List[int]], max_new_tokens: int,
                  extra_inputs: Optional[Dict[str, jax.Array]] = None
@@ -532,7 +992,13 @@ class Engine:
         if any(not list(p) for p in prompts):
             raise ValueError("empty prompt: each prompt needs >= 1 token")
         for p in prompts:
-            if len(list(p)) + max_new_tokens > self.cfg.max_len:
+            if self._scheduler == "continuous":
+                if len(list(p)) + max_new_tokens > self._capacity_tokens:
+                    raise ValueError(
+                        f"prompt ({len(list(p))}) + max_new "
+                        f"({max_new_tokens}) exceeds capacity_tokens "
+                        f"({self._capacity_tokens})")
+            elif len(list(p)) + max_new_tokens > self.cfg.max_len:
                 raise ValueError(
                     f"prompt ({len(list(p))}) + max_new ({max_new_tokens}) "
                     f"exceeds max_len ({self.cfg.max_len})")
@@ -720,6 +1186,28 @@ class Engine:
         out["prefill_plen_buckets"] = sorted(self._plen_buckets)
         out["decode_unroll"] = self._unroll
         out["decode_unroll_source"] = self._unroll_source
+        out["scheduler"] = self._scheduler
+        out["scheduler_forced"] = self._scheduler_forced
+        if self._scheduler == "continuous":
+            out["decode_chunk"] = self._chunk
+            out["capacity_tokens"] = self._capacity_tokens
+            out["page_size"] = self._page_size
+            out["page_size_source"] = self._page_size_source
+            if self._alloc is not None:
+                out["pages"] = {
+                    "page_size": self._alloc.page_size,
+                    "usable_pages": self._alloc.usable_pages,
+                    "used_pages": self._alloc.used_pages,
+                    "free_pages": self._alloc.free_pages,
+                    "utilization": self._alloc.utilization(),
+                    "high_water_pages": self._alloc.high_water_pages,
+                    "alloc_count": self._alloc.alloc_count,
+                    "free_count": self._alloc.free_count,
+                }
+            if self._csched is not None:
+                out["admissions"] = self._csched.admissions
+                out["evictions"] = self._csched.evictions
+                out["preemptions"] = self._csched.preemptions
         out["slots"] = self.cfg.max_batch
         out["slots_admitted"] = self._sched.admitted
         out["slots_evicted"] = self._sched.evicted

@@ -114,6 +114,33 @@ def test_mesh_parity_all_families(arch):
 
 
 @needs_8
+def test_mesh_continuous_vs_wave_parity():
+    """Paged continuous decode on a data=4,model=2 mesh serves the same
+    tokens as the wave engine on the SAME mesh, with the page size resolved
+    from a mesh-keyed tuned ``paged_attn`` entry."""
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+    cfg = ARCHITECTURES["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = [[t % cfg.vocab_size for t in p] for p in PROMPTS]
+    cont = Engine(model, params,
+                  ServeConfig(max_batch=8, max_len=64, mesh="data=4,model=2"))
+    wave = Engine(model, params,
+                  ServeConfig(max_batch=8, max_len=64, mesh="data=4,model=2",
+                              scheduler="wave"))
+    assert cont.generate(prompts, 5) == wave.generate(prompts, 5)
+    st = cont.stats()
+    assert st["scheduler"] == "continuous"
+    assert st["chunks"] >= 1 and st["admissions"] >= len(prompts)
+    # tuned/cpu-interpret.json carries a data4xmodel2-tagged paged_attn
+    # entry; the mesh label is part of the lookup key
+    assert st["page_size_source"].startswith("tuned:")
+    assert st["page_size"] == 16
+
+
+@needs_8
 def test_mesh_stats_provenance():
     _, _, eng, prompts, _ = _build("llama3.2-1b", mesh="data=4,model=2")
     eng.generate(prompts[:2], 3)

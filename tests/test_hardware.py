@@ -192,12 +192,14 @@ def test_legacy_host_cpu_db_reachable_from_cpu_interpret_lookups(tmp_path):
 
 def test_committed_cpu_interpret_db_exists_and_loads():
     """Acceptance: tuned/cpu-interpret.json is committed and loads under the
-    cpu-interpret profile (kernel ops plus the mesh-keyed decode unroll)."""
+    cpu-interpret profile (kernel ops plus the mesh-keyed decode unroll and
+    the paged-KV page size)."""
     path = os.path.join(REPO, "tuned", f"{CPU_INTERPRET.name}.json")
     assert os.path.exists(path), "tuned/cpu-interpret.json must be committed"
     db = TuningDB.from_file(path)
     assert db.hardware == CPU_INTERPRET.name
-    assert set(db.ops()) == {"gemm", "flash_attention", "decode_loop"}
+    assert set(db.ops()) == {"gemm", "flash_attention", "decode_loop",
+                             "paged_attn"}
     reg = TileRegistry()
     from repro.core.tuning_db import load_into_registry
     assert load_into_registry(reg, path) == len(db) > 0

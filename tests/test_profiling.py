@@ -178,7 +178,11 @@ def test_fused_decode_one_device_get_per_wave_under_tracing(
     cfg = ARCHITECTURES["llama3.2-1b"].reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(1))
-    eng = Engine(model, params, ServeConfig(max_batch=2, max_len=64))
+    # wave pinned: the wave-specific annotation names and the one-get-per-
+    # wave contract are what this test is about; the continuous scheduler's
+    # one-get-per-chunk contract lives in test_recompile_count.py
+    eng = Engine(model, params, ServeConfig(max_batch=2, max_len=64,
+                                            scheduler="wave"))
     prompts = [[5, 9, 2], [1, 3, 3], [2, 4, 6]]      # 3 prompts, 2 slots
     eng.generate(prompts, 4)                          # compile outside count
     calls = []

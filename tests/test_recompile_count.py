@@ -24,7 +24,21 @@ def engine_setup():
     cfg = ARCHITECTURES["llama3.2-1b"].reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_batch=4, max_len=64,
+                                            scheduler="wave"))
+    return cfg, eng
+
+
+@pytest.fixture(scope="module")
+def continuous_setup():
+    from repro.configs.catalog import ARCHITECTURES
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+    cfg = ARCHITECTURES["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, params, ServeConfig(max_batch=4, max_len=64))
+    assert eng.stats()["scheduler"] == "continuous"
     return cfg, eng
 
 
@@ -84,3 +98,43 @@ def test_cache_counter_is_live():
     assert calls._cache_size() == 1
     calls(jnp.zeros((3,)))           # new shape -> new compile
     assert calls._cache_size() == 2
+
+
+# -- continuous scheduler (paged KV) -----------------------------------------
+
+def test_continuous_steady_state_zero_recompiles(continuous_setup):
+    """Admission/eviction churn in steady state must be compile-free: the
+    chunk fn is keyed only on (width bucket, chunk, unroll) and the admit fn
+    on the plen bucket, so repeating a workload whose shapes were all seen
+    before must add ZERO compiled variants to either."""
+    cfg, eng = continuous_setup
+    # 6 requests over 4 slots with budgets spanning 2 chunks: mid-decode
+    # evictions, a second admission wave, several width buckets
+    lengths = [3, 5, 12, 4, 7, 9]
+    out1 = _gen(eng, cfg, lengths, 12)
+    assert eng.stats()["admissions"] >= 6          # churn actually happened
+    assert eng.stats()["chunks"] >= 2
+    before = (eng._chunk_fn._cache_size(), eng._admit_fn._cache_size())
+    out2 = _gen(eng, cfg, lengths, 12)
+    after = (eng._chunk_fn._cache_size(), eng._admit_fn._cache_size())
+    assert after == before, (
+        f"steady-state continuous decode recompiled: {before} -> {after}")
+    assert out1 == out2
+
+
+def test_continuous_one_device_get_per_chunk(continuous_setup, monkeypatch):
+    """The continuous drain's host-transfer contract: exactly one
+    device_get per decode chunk — admission, eviction and block-table
+    bookkeeping are host-side and must not add transfers."""
+    cfg, eng = continuous_setup
+    _gen(eng, cfg, [3, 5, 12, 4], 12)            # compile outside the count
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda *a, **k: (
+        calls.append(1), real(*a, **k))[1])
+    chunks0 = eng.stats()["chunks"]
+    _gen(eng, cfg, [3, 5, 12, 4, 7, 9], 12)
+    chunks = eng.stats()["chunks"] - chunks0
+    assert chunks >= 2
+    assert len(calls) == chunks, (
+        f"{len(calls)} host transfers for {chunks} chunks")

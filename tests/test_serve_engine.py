@@ -134,7 +134,7 @@ def test_slot_reuse_across_generate_calls():
 
 
 def test_more_prompts_than_slots_run_in_waves():
-    cfg, model, params, eng = _build(max_batch=2)
+    cfg, model, params, eng = _build(max_batch=2, scheduler="wave")
     prompts = RAGGED + [[9, 9, 1]]
     outs = eng.generate(prompts, 4)
     waves = eng.stats()["waves"]
@@ -146,8 +146,9 @@ def test_more_prompts_than_slots_run_in_waves():
 
 def test_exactly_one_host_transfer_per_generate(monkeypatch):
     """Regression guard for the tentpole: the decode loop must not sync the
-    host per token — one device_get per generate call."""
-    cfg, model, params, eng = _build()
+    host per token — one device_get per generate call (chunked continuous decode has its own
+    transfer contract — see test_recompile_count.py)."""
+    cfg, model, params, eng = _build(scheduler="wave")
     eng.generate(RAGGED, 6)                      # compile outside the count
     calls = []
     real = jax.device_get
@@ -171,7 +172,9 @@ def test_empty_prompt_and_empty_batch_raise():
 
 
 def test_overlong_request_raises_without_leaking_slots():
-    cfg, model, params, eng = _build(max_len=16)
+    # wave semantics: the continuous scheduler admits this request (12 + 8
+    # fits its token pool); test_continuous_token_capacity covers that path
+    cfg, model, params, eng = _build(max_len=16, scheduler="wave")
     with pytest.raises(ValueError, match="exceeds"):
         eng.generate([[1] * 12], 8)
     # the rejected request must not have consumed a slot
@@ -185,7 +188,8 @@ def test_mixed_wave_capacity_no_over_rejection():
     each request fit on its own.  Wave packing must schedule a
     long-prompt/small-budget and a short-prompt/big-budget request into
     separate waves and complete both."""
-    cfg, model, params, eng = _build(max_batch=2, max_len=16)
+    cfg, model, params, eng = _build(max_batch=2, max_len=16,
+                                      scheduler="wave")
     rid_a = eng.submit([1] * 12, 3)     # 12 + 3  = 15 <= 16: fits alone
     rid_b = eng.submit([2, 3], 12)      # 2  + 12 = 14 <= 16: fits alone
     results = eng.run()                 # used to raise: 12 + 12 > 16
@@ -200,7 +204,8 @@ def test_mixed_wave_capacity_no_over_rejection():
 def test_wave_packing_keeps_compatible_requests_batched():
     """Packing must not needlessly split: requests that fit jointly still
     share one wave (one prefill + one fused decode)."""
-    cfg, model, params, eng = _build(max_batch=3, max_len=64)
+    cfg, model, params, eng = _build(max_batch=3, max_len=64,
+                                      scheduler="wave")
     for p in RAGGED:
         eng.submit(p, 5)
     results = eng.run()
@@ -211,7 +216,7 @@ def test_wave_packing_keeps_compatible_requests_batched():
 def test_submit_rejects_oversized_request_fast():
     """Per-request validation at enqueue time: an oversized request fails at
     submit() instead of bricking the wave it would have joined."""
-    cfg, model, params, eng = _build(max_len=16)
+    cfg, model, params, eng = _build(max_len=16, scheduler="wave")
     with pytest.raises(ValueError, match="exceeds"):
         eng.submit([1] * 12, 8)         # 12 + 8 > 16
     assert eng.stats()["requests"] == 0
@@ -226,7 +231,7 @@ def test_near_capacity_bucket_clamped_to_max_len():
     recompile per distinct prompt length).  The clamped bucket keeps nearby
     long prompts in ONE bucket — and stays token-for-token exact."""
     from repro.serve import generate_per_prompt
-    cfg, model, params, eng = _build(max_len=48)
+    cfg, model, params, eng = _build(max_len=48, scheduler="wave")
     for plen in (38, 40):
         prompt = [(i * 7 + 3) % cfg.vocab_size for i in range(plen)]
         out = eng.generate([prompt], 4)[0]
@@ -272,7 +277,8 @@ def test_first_sample_key_decorrelated_from_loop():
     PRNG key that the loop then split again, correlating the first two
     samples.  Pin the fixed key schedule with an oracle: the first token
     must come from a fresh split, not from the wave key itself."""
-    cfg, model, params, eng = _build(temperature=1.5, max_batch=1)
+    cfg, model, params, eng = _build(temperature=1.5, max_batch=1,
+                                     scheduler="wave")
     out = eng.generate([[1, 2, 3, 4]], 1)[0]
     # oracle: replicate the engine's padding (bucket 8, pad token 0) and
     # key schedule (seed key -> per-wave split -> pre-sample split)
@@ -286,7 +292,8 @@ def test_first_sample_key_decorrelated_from_loop():
     assert out[0] == expected
     assert expected != buggy        # the regression is distinguishable
     # same seed -> deterministic across engines
-    cfg2, model2, params2, eng2 = _build(temperature=1.5, max_batch=1)
+    cfg2, model2, params2, eng2 = _build(temperature=1.5, max_batch=1,
+                                         scheduler="wave")
     assert eng2.generate([[1, 2, 3, 4]], 1)[0] == out
 
 
@@ -360,3 +367,97 @@ def test_decode_unroll_tuned_entry_resolves_and_keeps_parity():
         # registry (nearest-tier would otherwise satisfy nearby shapes)
         GLOBAL_REGISTRY._exact.pop((OP_DECODE_LOOP, "cpu-interpret", dt),
                                    None)
+
+
+# -- continuous scheduler (paged KV cache) -----------------------------------
+
+@pytest.mark.parametrize("arch", FLASH_FAMILIES)
+def test_continuous_matches_wave_engine_all_families(arch):
+    """Tentpole acceptance: the paged continuous engine is token-for-token
+    identical to the wave engine AND the per-prompt oracle across every
+    model family, on ragged prompts with flash prefill."""
+    cfg, model, params, eng_c = _build(arch, attention_impl="flash")
+    eng_w = Engine(model, params, ServeConfig(max_batch=3, max_len=64,
+                                              scheduler="wave"))
+    prompts = [[t % cfg.vocab_size for t in p] for p in RAGGED]
+    extra = {k: jnp.zeros((len(prompts),) + s.shape[1:], s.dtype)
+             for k, s in model.extra_inputs(len(prompts)).items()}
+    out_c = eng_c.generate(prompts, 5, extra_inputs=extra or None)
+    out_w = eng_w.generate(prompts, 5, extra_inputs=extra or None)
+    assert out_c == out_w, arch
+    oracle = generate_per_prompt(model, params, prompts, 5, max_len=64,
+                                 extra_inputs=extra or None)
+    assert out_c == oracle, arch
+    assert eng_c.stats()["scheduler"] == "continuous"
+
+
+def test_continuous_falls_back_to_wave_for_ssm_and_kv_quant():
+    """Models with no self-attention KV (pure SSM) or an int8-quantized
+    cache transparently keep the wave path, with the reason in stats()."""
+    cfg, model, params, eng = _build("mamba2-130m")
+    assert eng.stats()["scheduler"] == "wave"
+    assert "KV" in eng.stats()["scheduler_forced"]
+    out = eng.generate(RAGGED, 4)
+    assert out == [eng.generate([p], 4)[0] for p in RAGGED]
+
+
+def test_continuous_token_capacity_admits_beyond_max_len():
+    """Satellite fix: submit() used to enforce prompt + max_new <= max_len
+    even for the paged engine, whose true constraint is the token pool.
+    12 + 8 > max_len=16 but fits the 3 * 16 = 48-token pool."""
+    cfg, model, params, eng = _build(max_len=16)
+    assert eng.stats()["capacity_tokens"] == 48
+    out = eng.generate([[1] * 12], 8)[0]
+    assert out == generate_per_prompt(model, params, [[1] * 12], 8,
+                                      max_len=32)[0]
+    # the pool itself still bounds a single request, at submit time
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit([1] * 12, 48)
+    assert eng.stats()["requests"] == 1      # the rejected one never queued
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.generate([[1] * 12], 48)
+
+
+def test_continuous_stats_report_paged_provenance():
+    """stats() must surface the paged-cache telemetry: page size + its
+    resolution provenance, pool utilization, and the admission/eviction/
+    preemption counters."""
+    cfg, model, params, eng = _build(page_size=4)
+    eng.generate(RAGGED, 5)
+    st = eng.stats()
+    assert st["scheduler"] == "continuous"
+    assert st["scheduler_forced"] is None
+    assert st["page_size"] == 4
+    assert st["page_size_source"] == "config"
+    assert st["admissions"] == st["evictions"] == 3
+    assert st["preemptions"] == 0
+    pages = st["pages"]
+    assert pages["page_size"] == 4
+    assert pages["used_pages"] == 0          # drained pool: all pages home
+    assert pages["free_pages"] == pages["usable_pages"]
+    assert pages["high_water_pages"] > 0
+    assert 0.0 <= pages["utilization"] <= 1.0
+    assert pages["alloc_count"] == pages["free_count"]
+    assert st["chunks"] >= 1
+    assert st["admission_prefills"] >= 1
+    # with no explicit page_size the tuned paged_attn entry resolves it
+    _, _, _, eng_t = _build(hardware="cpu-interpret")
+    eng_t.generate([[1, 2, 3]], 2)
+    src = eng_t.stats()["page_size_source"]
+    assert src.startswith("tuned:") or src in ("default", "fallback")
+
+
+def test_continuous_preemption_restart_is_exact():
+    """A pool too small for every row's chunk growth forces youngest-first
+    preemption; victims requeue at the front, restart cleanly, and still
+    decode their exact solo tokens (greedy determinism)."""
+    cfg, model, params, eng = _build(capacity_tokens=40, page_size=8)
+    prompts = RAGGED + [[9, 9, 1]]
+    rids = [eng.submit(p, 10) for p in prompts]
+    results = eng.run()
+    st = eng.stats()
+    assert st["preemptions"] >= 1
+    assert st["pages"]["used_pages"] == 0    # everything returned
+    for rid, p in zip(rids, prompts):
+        assert results[rid] == generate_per_prompt(model, params, [p], 10,
+                                                   max_len=64)[0]
