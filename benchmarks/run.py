@@ -22,7 +22,7 @@ import traceback
 
 SUITES = ["gemm_tuning", "attention_tuning", "gemm_scaling", "relative_peak",
           "ratio_model", "model_step", "roofline_summary", "serving",
-          "serving_sustained"]
+          "serving_sustained", "serving_latency"]
 
 
 def _run_suite(suite: str, smoke: bool, hardware=None, mesh=None):

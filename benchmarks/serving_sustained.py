@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs.catalog import get_config
 from repro.models import build_model
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, Request, ServeConfig
 
 ARCH = "llama3.2-1b"
 SEED = 1234
@@ -54,7 +54,7 @@ def _workload(n_requests: int, vocab: int, max_len: int):
 def _drain(eng: Engine, prompts, budgets) -> float:
     t0 = time.perf_counter()
     for p, b in zip(prompts, budgets):
-        eng.submit(p, b)
+        eng.submit(Request(prompt=p, max_new_tokens=b))
     eng.run()
     return time.perf_counter() - t0
 

@@ -6,6 +6,7 @@ Subcommands::
     lint        trace-purity lint (TP00x) over src/repro
     artifacts   tuned-DB (AR00x) + bench-baseline (BA00x) validation
     coverage    sharding-rule coverage (SH00x) of all model families
+    stats       Engine.stats() keys vs the versioned schema (ST001)
     report      all of the above + the committed-baseline ratchet gate
 
 ``report`` is what CI runs: errors not present in
@@ -54,6 +55,11 @@ def _artifact_findings():
 def _coverage_findings():
     from repro.analysis.coverage import check_coverage
     return check_coverage()
+
+
+def _stats_findings():
+    from repro.analysis.stats_checks import check_stats_schema
+    return check_stats_schema(REPO_ROOT)
 
 
 def _emit(findings, args, extra_blob=None):
@@ -105,11 +111,17 @@ def cmd_coverage(args):
     return 1 if errors and args.strict else 0
 
 
+def cmd_stats(args):
+    errors, _ = _emit(_stats_findings(), args)
+    return 1 if errors and args.strict else 0
+
+
 def cmd_report(args):
     from repro.analysis.findings import (load_baseline, ratchet,
                                          save_baseline, SEV_ERROR)
     findings, graph = _lint_findings()
-    findings = findings + _artifact_findings() + _coverage_findings()
+    findings = (findings + _artifact_findings() + _coverage_findings()
+                + _stats_findings())
     errors, warnings = _emit(findings, args,
                              {"traced_functions": len(graph.traced)})
 
@@ -171,6 +183,12 @@ def main(argv=None):
     p.add_argument("--summary", action="store_true",
                    help="print per-family sharded-leaf statistics")
     p.set_defaults(fn=cmd_coverage)
+
+    p = sub.add_parser("stats",
+                       help="Engine.stats() key set vs the versioned "
+                            "stats schema (ST001)")
+    common(p)
+    p.set_defaults(fn=cmd_stats)
 
     p = sub.add_parser("report",
                        help="all checks + the committed-baseline ratchet "

@@ -107,6 +107,11 @@ DEFAULT_TOLERANCES = {
     "relative_peak/host-xla": 0.90,
     "serving/": 0.80,
     "serving_sustained/": 0.80,
+    # per-request wall-clock percentiles on shared runners: very noisy;
+    # the prefix_saved_frac row is counter-derived and keeps the strict
+    # default via the more specific prefix
+    "serving_latency/": 0.85,
+    "serving_latency/llama3.2-1b/prefix_saved_frac": 0.10,
 }
 
 

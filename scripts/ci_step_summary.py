@@ -18,6 +18,45 @@ import os
 import sys
 
 
+def _stats_md(path: str, blob: dict) -> list:
+    """Engine stats dict (schema v2+): rendered group-by-group from the
+    versioned schema, so the summary layout tracks the documented key set
+    instead of a hand-picked copy."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.serve import stats_schema
+
+    def _fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        if isinstance(v, dict):
+            s = json.dumps(v, sort_keys=True, default=str)
+            return f"`{s}`" if len(s) <= 80 else f"({len(v)} entries)"
+        if isinstance(v, (list, tuple)):
+            s = json.dumps(v, default=str)
+            return f"`{s}`" if len(s) <= 80 else f"({len(v)} items)"
+        return f"`{v}`" if v is not None else "—"
+
+    title = os.path.basename(path)
+    lines = [f"### `{title}` — engine stats schema "
+             f"v{blob.get('schema_version', '?')}, scheduler "
+             f"`{blob.get('scheduler', '?')}`", ""]
+    for group, keys in stats_schema.groups().items():
+        present = [k for k in keys if k in blob]
+        if not present:
+            continue
+        lines += [f"**{group}**", "", "| key | value | doc |",
+                  "| --- | --- | --- |"]
+        for k in present:
+            doc = stats_schema.STATS_SCHEMA[k].doc
+            lines.append(f"| `{k}` | {_fmt(blob[k])} | {doc} |")
+        lines.append("")
+    extra = sorted(set(blob) - set(stats_schema.STATS_SCHEMA))
+    if extra:
+        lines += [f"undocumented keys (ST001 would flag these in "
+                  f"`engine.stats()`): `{'`, `'.join(extra)}`", ""]
+    return lines
+
+
 def _bench_md(path: str, blob: dict) -> list:
     title = os.path.basename(path)
     mesh = blob.get("mesh")
@@ -91,6 +130,8 @@ def main(argv=None) -> int:
                 blob = json.load(f)
             if "findings" in blob:
                 lines = _findings_md(path, blob)
+            elif "schema_version" in blob and "scheduler" in blob:
+                lines = _stats_md(path, blob)
             elif "rows" in blob:
                 lines = _bench_md(path, blob)
             elif "families" in blob:

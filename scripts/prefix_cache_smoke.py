@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""CI smoke: prefix-cache savings must scale with the shared-prefix length.
+
+The acceptance contract of the prefix cache is quantitative, not "it
+hits": serving a repeated-prefix workload must skip prefill work
+*proportional to the shared-prefix length*, and the versioned
+``stats()["prefix_cache"]`` counters are the measurement.  This script
+drives one engine through three workloads whose only difference is the
+shared-prefix length L and asserts, per L:
+
+* a cold pass (cache just cleared) inserts every prompt and serves no
+  cached token;
+* a same-prefix/new-suffix pass hits **partial** on every prompt and
+  serves exactly ``n * (L rounded down to the page size)`` cached tokens
+  — the page-aligned shared prefix, nothing more, nothing less;
+* an exact-repeat pass hits **full** on every prompt and its
+  ``prefill_tokens_saved`` delta equals the workload's total prompt
+  tokens (prefill skipped entirely);
+* across lengths, the partial-hit savings scale exactly as
+  ``L_aligned`` does (ratio check — proportionality, not just growth).
+
+Greedy parity of the served tokens is the test suite's job
+(``tests/test_prefix_cache.py``); this smoke is the *work-saving* gate CI
+runs on every push.  Exit 0 = all assertions hold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                      # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.configs.catalog import ARCHITECTURES                 # noqa: E402
+from repro.models import build_model                            # noqa: E402
+from repro.serve import Engine, Request, ServeConfig            # noqa: E402
+
+ARCH = "llama3.2-1b"
+PAGE = 4
+PREFIX_LENGTHS = (8, 16, 24)    # page-aligned multiples of PAGE
+N_REQUESTS = 4
+MAX_NEW = 3
+SEED = 7
+
+
+def _drive(eng, prompts):
+    handles = [eng.submit(Request(prompt=p, max_new_tokens=MAX_NEW))
+               for p in prompts]
+    eng.run()
+    return [h.result(timeout=0) for h in handles]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", default=None,
+                    help="also write the engine's final stats() dict to "
+                         "this path (rendered schema-driven by "
+                         "ci_step_summary.py)")
+    args = ap.parse_args()
+    cfg = ARCHITECTURES[ARCH].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=N_REQUESTS, max_len=64,
+                             page_size=PAGE))
+    rng = np.random.RandomState(SEED)
+    failures = []
+    partial_served = {}
+
+    def check(cond, msg):
+        tag = "ok  " if cond else "FAIL"
+        print(f"[prefix-smoke] {tag} {msg}")
+        if not cond:
+            failures.append(msg)
+
+    for L in PREFIX_LENGTHS:
+        prefix = [int(t) for t in rng.randint(1, cfg.vocab_size, L)]
+        suffix = lambda: [int(t) for t in rng.randint(1, cfg.vocab_size, 3)]
+        cold_prompts = [prefix + suffix() for _ in range(N_REQUESTS)]
+        new_prompts = [prefix + suffix() for _ in range(N_REQUESTS)]
+        total_cold_tokens = sum(len(p) for p in cold_prompts)
+
+        eng.clear_prefix_cache()
+        st0 = eng.stats()["prefix_cache"]
+        _drive(eng, cold_prompts)
+        st1 = eng.stats()["prefix_cache"]
+        # cold pass: within the pass, later requests may partial-hit the
+        # pages the first insert pinned — but nothing was cached BEFORE it
+        check(st1["inserts"] - st0["inserts"] == N_REQUESTS,
+              f"L={L}: cold pass inserted all {N_REQUESTS} prompts")
+
+        _drive(eng, new_prompts)
+        st2 = eng.stats()["prefix_cache"]
+        aligned = (L // PAGE) * PAGE
+        served = st2["cached_tokens_served"] - st1["cached_tokens_served"]
+        check(st2["hits_partial"] - st1["hits_partial"] == N_REQUESTS,
+              f"L={L}: every new-suffix prompt partial-hit the prefix")
+        check(served == N_REQUESTS * aligned,
+              f"L={L}: partial hits served {served} cached tokens "
+              f"(= {N_REQUESTS} x {aligned} page-aligned prefix)")
+        partial_served[L] = served
+
+        _drive(eng, cold_prompts)
+        st3 = eng.stats()["prefix_cache"]
+        saved = st3["prefill_tokens_saved"] - st2["prefill_tokens_saved"]
+        check(st3["hits_full"] - st2["hits_full"] == N_REQUESTS,
+              f"L={L}: exact repeats all full-hit")
+        check(saved == total_cold_tokens,
+              f"L={L}: full hits skipped prefill for all "
+              f"{total_cold_tokens} prompt tokens (got {saved})")
+
+    # proportionality across lengths: savings scale as the aligned prefix
+    base_l = PREFIX_LENGTHS[0]
+    for L in PREFIX_LENGTHS[1:]:
+        want = partial_served[base_l] * L // base_l
+        check(partial_served[L] == want,
+              f"savings scale with prefix length: served[{L}]="
+              f"{partial_served[L]} == served[{base_l}] * {L}/{base_l}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(eng.stats(), f, indent=1, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"[prefix-smoke] wrote stats -> {args.json}")
+    if failures:
+        print(f"[prefix-smoke] FAILED: {len(failures)} assertion(s)")
+        return 1
+    print("[prefix-smoke] PASS: prefill savings proportional to "
+          f"shared-prefix length over L={list(PREFIX_LENGTHS)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

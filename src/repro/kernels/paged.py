@@ -29,6 +29,7 @@ rows), and TRASH-page writes may collide freely because nothing reads them.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -55,6 +56,28 @@ def paged_gather(pool_flat: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     flat = jnp.take(pool_flat, idx.reshape(-1), axis=-3)
     lead = pool_flat.shape[:-3]
     return flat.reshape(lead + idx.shape + pool_flat.shape[-2:])
+
+
+def paged_copy(pool_flat: jnp.ndarray, src_page, dst_page,
+               page_size: int) -> jnp.ndarray:
+    """Copy one page's token rows to another page (prefix-cache COW).
+
+    A full-prompt prefix hit shares its full pages read-only but must own
+    the page that straddles the divergence point — subsequent decode writes
+    land there.  This copies the cached page's ``page_size`` token rows into
+    the hit row's freshly-allocated page.  ``src_page`` / ``dst_page`` are
+    traced int32 scalars (page ids vary per hit; the copy compiles once),
+    ``page_size`` is static layout.
+
+    Bit-exactness note: this is a pure memcpy on the token axis — the copied
+    KV is bit-identical to what prefill scattered into the source page, so
+    the shared-prefix read path stays bit-identical to the cold path.
+    """
+    src = jax.lax.dynamic_slice_in_dim(
+        pool_flat, src_page * page_size, page_size, axis=pool_flat.ndim - 3)
+    start = [0] * pool_flat.ndim
+    start[pool_flat.ndim - 3] = dst_page * page_size
+    return jax.lax.dynamic_update_slice(pool_flat, src, tuple(start))
 
 
 def paged_scatter(pool_flat: jnp.ndarray, idx: jnp.ndarray,

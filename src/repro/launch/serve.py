@@ -11,6 +11,12 @@ over a device mesh — token-for-token identical to the single-device run:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --mesh data=4,model=2 --stats
+
+``--server`` runs the same prompts through the long-lived streaming
+front-end instead of one batched call: requests are submitted from the
+caller thread into a :class:`repro.serve.Server`, tokens print as they
+become host-visible, and ``--stats`` then includes per-request TTFT /
+tok-per-s percentiles.
 """
 from __future__ import annotations
 
@@ -23,8 +29,36 @@ from repro.configs.catalog import get_config
 from repro.core import tuning_db
 from repro.core.hardware import find_profile, resolve_hardware
 from repro.core.registry import GLOBAL_REGISTRY
+from repro.launch.common import add_common_args, add_serving_args
 from repro.models import build_model
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, Request, ServeConfig, Server
+
+
+def _serve_streaming(eng, prompts, max_new):
+    """--server mode: long-lived Server + per-token streaming prints."""
+    streams = {i: [] for i in range(len(prompts))}
+
+    def stream_for(i):
+        def cb(ev):
+            if ev.token is not None:
+                streams[i].append(ev.token)
+                print(f"[stream] prompt {i} token[{ev.index}] = {ev.token}")
+            else:
+                print(f"[stream] prompt {i} finished ({ev.finish_reason})")
+        return cb
+
+    with Server(eng) as srv:
+        handles = [srv.submit(Request(prompt=p, max_new_tokens=max_new,
+                                      stream=stream_for(i)))
+                   for i, p in enumerate(prompts)]
+        results = [h.result(timeout=600) for h in handles]
+    for i, (p, res) in enumerate(zip(prompts, results)):
+        assert res.tokens == streams[i]   # streamed == batch, by contract
+        print(f"prompt={p} -> {res.tokens} "
+              f"(ttft {res.ttft_s * 1e3:.1f} ms, {res.tok_per_s:.0f} tok/s"
+              + (f", prefix hit: {res.prefix_hit}" if res.prefix_hit
+                 else "") + ")")
+    return results
 
 
 def main() -> None:
@@ -37,35 +71,15 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=None,
                     help="KV-cache slots (default: number of prompts)")
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--scheduler", choices=["continuous", "wave"],
-                    default="continuous",
-                    help="continuous = paged KV + admit/evict at chunk "
-                         "boundaries (default); wave = slot-per-request")
-    ap.add_argument("--page-size", type=int, default=None,
-                    help="paged-KV page size in tokens (default: tuned "
-                         "paged_attn entry for this hardware/mesh)")
-    ap.add_argument("--capacity-tokens", type=int, default=None,
-                    help="paged-pool capacity in tokens (default: "
-                         "max_batch * max_len)")
-    ap.add_argument("--decode-chunk", type=int, default=8,
-                    help="tokens per fused chunk between scheduling "
-                         "boundaries (power of two)")
     ap.add_argument("--attn-impl", choices=["chunked", "flash"], default=None,
                     help="override the config's attention implementation "
                          "(flash = tuned Pallas kernel for prefill)")
-    ap.add_argument("--stats", action="store_true",
-                    help="print engine stats (throughput, tile provenance)")
-    ap.add_argument("--hardware", default=None,
-                    help="hardware profile the engine tunes against "
-                         "(default: $REPRO_HARDWARE or auto-detect)")
-    ap.add_argument("--mesh", default=None,
-                    help="device mesh spec: 'data=N,model=M' or 'auto' "
-                         "(default: single-device)")
-    ap.add_argument("--tuned-dir", default=None,
-                    help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
-    ap.add_argument("--trace-dir", default=None,
-                    help="capture a jax.profiler trace of the generate call "
-                         "into this dir (post-process: scripts/profile.py)")
+    ap.add_argument("--server", action="store_true",
+                    help="serve through the long-lived streaming Server "
+                         "(per-token callbacks + TTFT percentiles) instead "
+                         "of one batched generate call")
+    add_serving_args(ap)
+    add_common_args(ap)
     args = ap.parse_args()
 
     hardware = resolve_hardware(args.hardware)
@@ -111,15 +125,24 @@ def main() -> None:
                              scheduler=args.scheduler,
                              page_size=args.page_size,
                              capacity_tokens=args.capacity_tokens,
-                             decode_chunk=args.decode_chunk))
+                             decode_chunk=args.decode_chunk,
+                             prefix_cache=not args.no_prefix_cache))
     from repro.profiling import trace
-    with trace(args.trace_dir, enabled=bool(args.trace_dir)) as session:
-        outs = eng.generate(prompts, args.max_new, extra_inputs=extra or None)
+    if args.server:
+        if extra:
+            ap.error("--server cannot carry extra-input models "
+                     "(extras are positional per drain)")
+        with trace(args.trace_dir, enabled=bool(args.trace_dir)) as session:
+            _serve_streaming(eng, prompts, args.max_new)
+    else:
+        with trace(args.trace_dir, enabled=bool(args.trace_dir)) as session:
+            outs = eng.generate(prompts, args.max_new,
+                                extra_inputs=extra or None)
+        for p, o in zip(prompts, outs):
+            print(f"prompt={p} -> {o}")
     if session.enabled:
         print(f"[trace] captured {len(session.trace_files())} trace file(s) "
               f"under {args.trace_dir}")
-    for p, o in zip(prompts, outs):
-        print(f"prompt={p} -> {o}")
 
     if args.stats:
         st = eng.stats()
@@ -144,6 +167,18 @@ def main() -> None:
                   f"admissions={st['admissions']} "
                   f"evictions={st['evictions']} "
                   f"preemptions={st['preemptions']}")
+        pc = st["prefix_cache"]
+        if pc["enabled"]:
+            print(f"[stats] prefix cache: {pc['hits_full']} full / "
+                  f"{pc['hits_partial']} partial hit(s), {pc['misses']} "
+                  f"miss(es), {pc['prefill_tokens_saved']} prefill "
+                  f"token(s) saved, {pc['pinned_pages']} page(s) pinned")
+        lat = st["latency"]
+        if lat["count"]:
+            print(f"[stats] latency over {lat['count']} request(s): "
+                  f"ttft p50 {lat['ttft_s']['p50'] * 1e3:.1f} ms / "
+                  f"p99 {lat['ttft_s']['p99'] * 1e3:.1f} ms, "
+                  f"tok/s p50 {lat['tok_per_s']['p50']:.0f}")
         print(f"[stats] mesh={st['mesh']}")
         if st["sharding"]:
             print(f"[stats] sharding rules={st['sharding']['rules']} "

@@ -7,15 +7,16 @@ On a real cluster this runs once per host under the usual multi-host jax
 bootstrap (jax.distributed.initialize); the mesh/rules/elastic-restore logic
 is identical.  ``--resume`` restarts from the latest checkpoint (the
 fault-tolerance path: deterministic data + atomic checkpoints = exact
-replay).  ``--mesh data=N,model=M`` (or the legacy
-``--mesh-data/--mesh-model`` pair) builds a device mesh when the host
-exposes multiple devices; the train step is then jit-sharded — params by
-the sharding rules, the batch over the data axes.
+replay).  ``--mesh data=N,model=M`` (or ``--mesh auto``) builds a device
+mesh when the host exposes multiple devices; the train step is then
+jit-sharded — params by the sharding rules, the batch over the data axes.
+The retired ``--mesh-data``/``--mesh-model`` pair still parses: it warns
+and forwards onto ``--mesh``.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
+import time
 
 import jax
 
@@ -26,7 +27,8 @@ from repro.core.hardware import resolve_hardware
 from repro.core.registry import GLOBAL_REGISTRY
 from repro.data import DataConfig, TokenPipeline
 from repro.distributed import sharding as sh
-from repro.launch.mesh import build_mesh, describe_mesh, make_host_mesh
+from repro.launch.common import add_common_args, deprecated_flag
+from repro.launch.mesh import build_mesh, describe_mesh
 from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
 from repro.train import (Trainer, TrainerConfig, abstract_train_state,
@@ -47,21 +49,18 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--mesh", default=None,
-                    help="device mesh spec: 'data=N,model=M' or 'auto' "
-                         "(overrides --mesh-data/--mesh-model)")
-    ap.add_argument("--mesh-data", type=int, default=1)
-    ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--step-deadline-s", type=float, default=None)
-    ap.add_argument("--hardware", default=None,
-                    help="hardware profile for tile lookups "
-                         "(default: $REPRO_HARDWARE or auto-detect)")
-    ap.add_argument("--tuned-dir", default=None,
-                    help="tuning-DB dir (default: $REPRO_TUNED_DIR or repo tuned/)")
-    ap.add_argument("--trace-dir", default=None,
-                    help="capture a jax.profiler trace of the training run "
-                         "into this dir (post-process: scripts/profile.py)")
+    add_common_args(ap)
+    # retired in favour of the unified --mesh spec; warn + forward
+    deprecated_flag(ap, "--mesh-data", "--mesh", type=int)
+    deprecated_flag(ap, "--mesh-model", "--mesh", type=int)
     args = ap.parse_args()
+    used = getattr(args, "_deprecated_used", set())
+    if {"mesh_data", "mesh_model"} & used and not args.mesh:
+        data = args.mesh_data or 1
+        model_ax = args.mesh_model or 1
+        if data * model_ax > 1:
+            args.mesh = f"data={data},model={model_ax}"
 
     hardware = resolve_hardware(args.hardware)
     print(f"[hw] profile={hardware} "
@@ -88,9 +87,6 @@ def main() -> None:
         # hardware= applies the profile's latency-hiding XLA flags before
         # the first device touch (overlap grad all-reduces with compute)
         mesh = build_mesh(args.mesh, hardware=hardware)
-    elif args.mesh_data * args.mesh_model > 1:
-        mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
-    if mesh is not None:
         rules = sh.rules_for_mesh(mesh)
         print(f"[mesh] {describe_mesh(mesh)} rules={rules}")
 
@@ -116,12 +112,20 @@ def main() -> None:
                                  args.compress_grads)
 
     from repro.profiling import trace
+    t0 = time.perf_counter()
     with execution_context(hardware=hardware), \
             trace(args.trace_dir, enabled=bool(args.trace_dir)):
         state, history = trainer.run(state, start_step=start)
+    wall = time.perf_counter() - t0
     for step, loss in history:
         print(f"step {step:6d}  loss {loss:.4f}")
     print(f"done at step {int(state.step)}")
+    if args.stats:
+        steps_run = max(int(state.step) - start, 1)
+        toks = steps_run * args.batch * args.seq_len
+        print(f"[stats] hw={hardware}, {steps_run} step(s) in {wall:.1f}s "
+              f"({steps_run / wall:.2f} step/s, {toks / wall:.0f} tok/s), "
+              f"mesh={describe_mesh(mesh)}")
 
 
 if __name__ == "__main__":

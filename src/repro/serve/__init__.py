@@ -1,4 +1,8 @@
+from repro.serve.api import (  # noqa: F401
+    GenerationResult, Request, RequestHandle, StreamEvent,
+)
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
 from repro.serve.reference import (  # noqa: F401
     PerTokenSyncEngine, generate_per_prompt, generate_per_token_sync,
 )
+from repro.serve.server import Server  # noqa: F401

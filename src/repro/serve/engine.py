@@ -42,6 +42,22 @@ with two schedulers sharing one model path:
   per-shard *local* GEMM shapes (TP changes which tuned entry is hit), and
   :meth:`Engine.stats` reports mesh/sharding provenance.
 
+* **Prefix cache** — continuous engines reuse prefilled prompt KV across
+  requests (:mod:`repro.serve.prefix_cache`): a trie of page-sized token
+  chunks pins pages in the allocator with refcounts.  A full-prompt hit
+  skips admission prefill entirely (shared read-only pages + one
+  copy-on-write page at the divergence point + a cached logits/fixed-state
+  snapshot — bit-exact under greedy decoding); a page-aligned partial hit
+  shares the prefix pages and redirects the re-run prefill's shared-column
+  writes to the TRASH page.  Eviction is LRU under pool pressure and always
+  yields before live rows are preempted.
+* **Typed API** — :mod:`repro.serve.api`: ``submit(Request) ->
+  RequestHandle`` and ``run() -> List[GenerationResult]`` with per-request
+  timing, finish reasons, prefix provenance and per-token ``stream``
+  callbacks fired at each decode-chunk boundary.  The legacy positional
+  ``submit(prompt, n)`` / ``{rid: tokens}`` surface still works behind one
+  ``DeprecationWarning`` per process.
+
 Prompt lengths are bucketed to powers of two (min 8, clamped so the bucket
 plus the wave's decode budget never exceeds ``max_len``) so a wave and a
 lone prompt in the same bucket share one compiled prefill *and* take
@@ -51,16 +67,32 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Union
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.paged import paged_gather, paged_scatter
+from repro.kernels.paged import paged_copy, paged_gather, paged_scatter
 from repro.models.model import Model
+from repro.serve import api
+from repro.serve.stats_schema import SCHEMA_VERSION
 
 _PLEN_BUCKET_MIN = 8
+
+#: one DeprecationWarning per process for the legacy submit()/run() surface
+_LEGACY_SUBMIT_WARNED = False
+
+#: per-request latency records kept for percentile stats
+_LATENCY_WINDOW = 4096
+
+
+def _percentiles(xs: List[float]) -> Dict[str, Optional[float]]:
+    if not xs:
+        return {"p50": None, "p95": None, "p99": None}
+    q = np.percentile(np.asarray(xs, np.float64), [50.0, 95.0, 99.0])
+    return {"p50": float(q[0]), "p95": float(q[1]), "p99": float(q[2])}
 
 
 def _bucket_len(n: int, cap: Optional[int] = None) -> int:
@@ -113,6 +145,10 @@ class ServeConfig:
     # Tokens decoded per fused chunk between scheduling boundaries
     # (admission/eviction happen only at boundaries).  Power of two.
     decode_chunk: int = 8
+    # Share prefilled prompt KV across requests with common prefixes
+    # (continuous scheduler only; requests served with extra_inputs are
+    # never cached — their extras aren't part of the content key).
+    prefix_cache: bool = True
 
 
 @dataclasses.dataclass
@@ -123,6 +159,16 @@ class _Request:
     row: Optional[int] = None         # row in the shared extra_inputs arrays
     slot: Optional[int] = None
     tokens: Optional[List[int]] = None
+    # -- typed-API bookkeeping ------------------------------------------
+    legacy: bool = False              # submitted via the deprecated surface
+    handle: Optional[api.RequestHandle] = None
+    stream: Optional[Callable[[api.StreamEvent], None]] = None
+    result: Optional[api.GenerationResult] = None
+    finish_reason: Optional[str] = None
+    t_submit: float = 0.0
+    t_first: Optional[float] = None   # first token host-visible (TTFT end)
+    prefix_hit: Optional[str] = None  # "full" | "partial" | None
+    cached_prefix_tokens: int = 0
 
 
 class _SlotScheduler:
@@ -243,6 +289,14 @@ class Engine:
         self._scratch: Dict[int, object] = {}   # admission prefill caches
         self._chunk_fn = None             # jitted fused chunk (lazily built)
         self._admit_fn = None             # jitted prefill+insert
+        self._copy_fn = None              # jitted COW page copy
+        self._prefix = None               # PrefixCache (continuous only)
+        # Server-mode ingestion: a callable polled at every chunk/wave
+        # boundary yielding (api.Request, RequestHandle) pairs submitted
+        # mid-drain (see repro.serve.server.Server).
+        self._ingest_hook: Optional[Callable] = None
+        self._lat_ttft: List[float] = []  # finished-request TTFT records
+        self._lat_tok: List[float] = []   # finished-request tok/s records
         self._stats: Dict[str, float] = {
             "requests": 0, "tokens_generated": 0, "generate_calls": 0,
             "waves": 0, "chunks": 0, "admission_prefills": 0,
@@ -552,6 +606,12 @@ class Engine:
                     fixed, sh.cache_shardings(self.mesh, self.rules, fixed))
         self._pools, self._fixed = pools, fixed
         self._cur = jnp.zeros((self.cfg.max_batch,), jnp.int32)
+        if self.cfg.prefix_cache:
+            from repro.serve.prefix_cache import PrefixCache
+            self._prefix = PrefixCache(self._alloc)
+            # Under pool pressure the scheduler reclaims cache-pinned pages
+            # (LRU) before preempting live rows.
+            self._csched.reclaim = self._prefix.reclaim
         self._stats["cache_allocs"] += 1
         self._trace_decode_tiles()
 
@@ -610,9 +670,91 @@ class Engine:
             key, sub = jax.random.split(key)
             first = self._sample(logits0, sub)
             cur_out = cur.at[slot_map].set(first[slot_map])
-            return pools_out, fixed_out, cur_out, key
+            # logits0 rides out so admission can snapshot each admitted
+            # row's last-position logits into the prefix cache.
+            return pools_out, fixed_out, cur_out, key, logits0
 
         return jax.jit(self._with_mesh(admit_fn))
+
+    # -- prefix-cache device plumbing ------------------------------------
+    @staticmethod
+    def _walk_fixed(tree, fn, kind=None):
+        """Apply ``fn(leaf, kind)`` over a fixed-cache tree with the same
+        kind resolution ``_scatter_fixed`` uses (cross-KV / SSM state at
+        batch dim -4, conv state at -3)."""
+        kinds = {"cross": "kv", "ssm": "ssm", "conv": "conv"}
+        if isinstance(tree, dict):
+            return {k: Engine._walk_fixed(v, fn, kinds.get(k, kind))
+                    for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(Engine._walk_fixed(v, fn, kind) for v in tree)
+        return fn(tree, kind)
+
+    def _slice_fixed_row(self, slot: int):
+        """Snapshot one slot's rows of every fixed cache leaf (the
+        per-request state a full prefix hit must restore — SSM/conv state
+        for hybrids; empty for pure transformers)."""
+        def take(leaf, kind):
+            bd = leaf.ndim - (3 if kind == "conv" else 4)
+            return jnp.take(leaf, slot, axis=bd)
+        return self._walk_fixed(self._fixed, take)
+
+    def _restore_fixed_row(self, fixed, snap, slot: int):
+        """Write a :meth:`_slice_fixed_row` snapshot back into ``slot``."""
+        kinds = {"cross": "kv", "ssm": "ssm", "conv": "conv"}
+
+        def walk(old, sn, kind=None):
+            if isinstance(old, dict):
+                return {k: walk(old[k], sn[k], kinds.get(k, kind))
+                        for k in old}
+            if isinstance(old, (tuple, list)):
+                return type(old)(walk(o, s, kind)
+                                 for o, s in zip(old, sn))
+            bd = old.ndim - (3 if kind == "conv" else 4)
+            moved = jnp.moveaxis(old, bd, 0)
+            return jnp.moveaxis(moved.at[slot].set(sn), 0, bd)
+
+        return walk(fixed, snap)
+
+    def _build_copy_fn(self):
+        """Jitted COW page copy: page ids are traced scalars, so every
+        divergence-point copy shares one compile."""
+        page = self._page_size
+
+        def copy_fn(pools, src_page, dst_page):
+            return jax.tree_util.tree_map(
+                lambda pool: paged_copy(pool, src_page, dst_page, page),
+                pools)
+
+        return jax.jit(self._with_mesh(copy_fn))
+
+    def _restore_hits(self, hits, key: jax.Array) -> jax.Array:
+        """Admit full-prompt prefix hits without prefill: the row's block
+        table already points at the shared pages; copy the straddling page
+        (COW), restore the fixed-leaf snapshot, and sample the first token
+        from the cached last-position logits (bit-identical under greedy —
+        the argmax runs over the exact array the cold path sampled from)."""
+        from repro.profiling import annotate
+        t0 = time.perf_counter()
+        page = self._page_size
+        with annotate("serve.prefix_restore"):
+            for req, row, entry in hits:
+                if entry.tail_page is not None:
+                    dst = row.pages[len(req.prompt) // page]
+                    if self._copy_fn is None:
+                        self._copy_fn = self._build_copy_fn()
+                    self._pools = self._copy_fn(
+                        self._pools, jnp.int32(entry.tail_page),
+                        jnp.int32(dst))
+                if self._fixed:
+                    self._fixed = self._restore_fixed_row(
+                        self._fixed, entry.fixed, row.slot)
+                # Same key discipline as admission: split, then sample.
+                key, sub = jax.random.split(key)
+                first = self._sample(entry.logits0[None, :], sub)
+                self._cur = self._cur.at[row.slot].set(first[0])
+        self._stats["prefill_seconds"] += time.perf_counter() - t0
+        return key
 
     def _build_chunk_fn(self):
         """Jitted fused decode chunk: gather a dense right-aligned KV view
@@ -690,62 +832,102 @@ class Engine:
                        static_argnames=("width", "chunk", "unroll"))
 
     # -- request queue --------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               row: Optional[int] = None) -> int:
+    def submit(self, request, max_new_tokens: Optional[int] = None,
+               row: Optional[int] = None,
+               _handle: Optional[api.RequestHandle] = None):
         """Queue one generation request.
 
-        Args:
-          prompt: non-empty token-id sequence.
-          max_new_tokens: decode budget for this request (>= 1).
-          row: index of this request in the ``extra_inputs`` arrays later
-            passed to :meth:`run` (required when extras are used;
-            :meth:`generate` fills it automatically).
+        The typed surface takes an :class:`repro.serve.api.Request` and
+        returns a :class:`repro.serve.api.RequestHandle` resolved the
+        moment the request finishes::
 
-        Returns:
-          The request id; :meth:`run` keys its result dict by it.
+            handle = eng.submit(Request(prompt=[5, 9, 2], max_new_tokens=16))
+            eng.run()
+            tokens = handle.result().tokens
 
-        Example::
+        The legacy positional form ``submit(prompt, max_new_tokens, row=)``
+        still returns a bare request id (and makes :meth:`run` return the
+        legacy ``{rid: tokens}`` dict) behind one ``DeprecationWarning``
+        per process; see ``docs/SERVING.md`` for migration notes.
 
-            rid = eng.submit([5, 9, 2], max_new_tokens=16)
-            tokens = eng.run()[rid]
+        ``_handle`` is internal (server mode pre-creates the handle on the
+        ingestion thread).
         """
-        prompt = list(prompt)
+        global _LEGACY_SUBMIT_WARNED
+        if isinstance(request, api.Request):
+            if max_new_tokens is not None or row is not None:
+                raise TypeError(
+                    "submit(Request) takes no positional max_new_tokens/row "
+                    "— set them on the Request")
+            if (request.temperature is not None
+                    and request.temperature != self.cfg.temperature):
+                raise ValueError(
+                    f"Request.temperature {request.temperature} != engine "
+                    f"ServeConfig.temperature {self.cfg.temperature}; the "
+                    f"engine compiles one sampling configuration")
+            prompt = list(request.prompt)
+            max_new = int(request.max_new_tokens)
+            row = request.row
+            stream = request.stream
+            legacy = False
+        else:
+            if not _LEGACY_SUBMIT_WARNED:
+                _LEGACY_SUBMIT_WARNED = True
+                warnings.warn(
+                    "Engine.submit(prompt, max_new_tokens) and the "
+                    "{rid: tokens} run() return are deprecated; submit a "
+                    "repro.serve.api.Request and read GenerationResult "
+                    "(docs/SERVING.md has migration notes)",
+                    DeprecationWarning, stacklevel=2)
+            if max_new_tokens is None:
+                raise TypeError(
+                    "legacy submit(prompt, max_new_tokens) needs "
+                    "max_new_tokens")
+            prompt = list(request)
+            max_new = int(max_new_tokens)
+            stream = None
+            legacy = True
         if not prompt:
             raise ValueError("empty prompt: each prompt needs >= 1 token")
-        if max_new_tokens < 1:
-            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if max_new < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new}")
         # Per-request capacity check at enqueue time: an oversized request
         # fails fast HERE instead of bricking the batch it lands in later.
         # The continuous scheduler's capacity currency is TOKENS in the
         # paged pool (one request may exceed max_len as long as it fits the
         # pool); the wave scheduler reserves a max_len-column slot.
         if self._scheduler == "continuous":
-            if len(prompt) + max_new_tokens > self._capacity_tokens:
+            if len(prompt) + max_new > self._capacity_tokens:
                 raise ValueError(
-                    f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) "
+                    f"prompt ({len(prompt)}) + max_new ({max_new}) "
                     f"exceeds capacity_tokens ({self._capacity_tokens})")
-        elif len(prompt) + max_new_tokens > self.cfg.max_len:
+        elif len(prompt) + max_new > self.cfg.max_len:
             raise ValueError(
-                f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) exceeds "
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
                 f"max_len ({self.cfg.max_len})")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(_Request(rid, prompt, int(max_new_tokens), row))
+        req = _Request(rid, prompt, max_new, row, legacy=legacy,
+                       stream=stream, t_submit=time.perf_counter())
+        if not legacy:
+            handle = _handle if _handle is not None else api.RequestHandle()
+            handle.request_id = rid
+            req.handle = handle
+        self._queue.append(req)
         self._stats["requests"] += 1
-        return rid
+        return rid if legacy else req.handle
 
-    def run(self, extra_inputs: Optional[Dict[str, jax.Array]] = None
-            ) -> Dict[int, List[int]]:
-        """Drain the submitted queue and return every request's tokens.
+    def run(self, extra_inputs: Optional[Dict[str, jax.Array]] = None):
+        """Drain the submitted queue.
 
-        Requests are served in waves of up to ``max_batch`` KV-cache slots;
-        each wave is one prefill plus one fused device-resident decode loop
-        (a single host transfer).  Ragged prompt lengths within a wave are
-        handled by left-padding + ``kv_start`` masking.  Waves are *packed
-        by capacity*: a wave's KV need is ``max(prompt) + max(max_new)``
-        over its members, so a long-prompt/small-budget request and a
-        short-prompt/big-budget request that each fit on their own are
-        scheduled into separate waves instead of being rejected together.
+        Requests are served by the configured scheduler (continuous paged
+        batching by default; wave otherwise).  Ragged prompt lengths are
+        handled by left-padding + ``kv_start`` masking.  Wave scheduling is
+        *packed by capacity*: a wave's KV need is ``max(prompt) +
+        max(max_new)`` over its members, so a long-prompt/small-budget
+        request and a short-prompt/big-budget request that each fit on
+        their own are scheduled into separate waves instead of being
+        rejected together.
 
         Args:
           extra_inputs: optional per-request model inputs (e.g. Whisper
@@ -753,10 +935,12 @@ class Engine:
             ``row=``.
 
         Returns:
-          ``{request_id: generated token list}`` for every drained request.
+          ``List[GenerationResult]`` in request-id order — unless any
+          drained request came through the deprecated positional
+          ``submit``, in which case the legacy ``{request_id: token list}``
+          dict is returned (handles are still resolved either way).
         """
         from repro.core import execution_context
-        results: Dict[int, List[int]] = {}
         # One key per run, split per wave: waves draw decorrelated samples
         # while repeated runs stay deterministic for a fixed seed.
         key = jax.random.PRNGKey(self.cfg.seed)
@@ -765,14 +949,55 @@ class Engine:
         # profile the engine reports in stats().
         with execution_context(hardware=self.hardware):
             if self._scheduler == "continuous":
-                return self._run_continuous(extra_inputs, key)
-            while self._queue:
-                wave = self._pack_wave()
-                key, wave_key = jax.random.split(key)
-                self._run_wave(wave, extra_inputs, wave_key)
-                for r in wave:
-                    results[r.rid] = r.tokens
-        return results
+                drained = self._run_continuous(extra_inputs, key)
+            else:
+                drained = []
+                while True:
+                    self._poll_ingest()
+                    if not self._queue:
+                        break
+                    wave = self._pack_wave()
+                    key, wave_key = jax.random.split(key)
+                    self._run_wave(wave, extra_inputs, wave_key)
+                    drained.extend(wave)
+        if any(r.legacy for r in drained):
+            return {r.rid: r.tokens for r in drained}
+        return [r.result for r in sorted(drained, key=lambda r: r.rid)]
+
+    def _poll_ingest(self) -> None:
+        """Pull server-mode requests in at a scheduling boundary (no-op
+        without an ingest hook)."""
+        if self._ingest_hook is None:
+            return
+        for req, handle in self._ingest_hook():
+            self.submit(req, _handle=handle)
+
+    def _finish_request(self, req: _Request, reason: str,
+                        now: float) -> None:
+        """Request-granular completion: latency records, the terminal
+        stream event, and handle resolution (servers see results without
+        waiting for the drain to end)."""
+        req.finish_reason = reason
+        total = max(now - req.t_submit, 1e-9)
+        ttft = (req.t_first - req.t_submit
+                if req.t_first is not None else total)
+        n = len(req.tokens)
+        self._lat_ttft.append(ttft)
+        self._lat_tok.append(n / total)
+        if len(self._lat_tok) > _LATENCY_WINDOW:
+            del self._lat_ttft[:-_LATENCY_WINDOW]
+            del self._lat_tok[:-_LATENCY_WINDOW]
+        req.result = api.GenerationResult(
+            request_id=req.rid, tokens=list(req.tokens),
+            finish_reason=reason, prompt_len=len(req.prompt),
+            ttft_s=ttft, total_s=total, tok_per_s=n / total,
+            prefix_hit=req.prefix_hit,
+            cached_prefix_tokens=req.cached_prefix_tokens)
+        if req.stream is not None:
+            req.stream(api.StreamEvent(req.rid, None, n, finished=True,
+                                       finish_reason=reason))
+        if req.handle is not None:
+            req.handle._set_result(req.result)
 
     def _pack_wave(self) -> List[_Request]:
         """Pop the next capacity-feasible wave off the queue (FIFO-biased).
@@ -800,26 +1025,30 @@ class Engine:
 
     # -- continuous drain: admit/evict at chunk boundaries ----------------
     def _run_continuous(self, extra_inputs: Optional[Dict[str, jax.Array]],
-                        key: jax.Array) -> Dict[int, List[int]]:
+                        key: jax.Array) -> List[_Request]:
         """Drain the queue with true continuous batching.
 
-        The loop body is one *chunk boundary*: admit every queue-head
-        request that fits (strict FIFO — the head blocks), grow live block
-        tables for the next chunk (preempting youngest-admitted rows if the
-        pool runs dry; victims requeue at the FRONT with a clean restart),
-        run one fused decode chunk, then evict rows that finished inside
-        it.  Exactly one host transfer per chunk.
+        The loop body is one *chunk boundary*: poll the server ingest hook,
+        admit every queue-head request that fits (strict FIFO — the head
+        blocks), grow live block tables for the next chunk (preempting
+        youngest-admitted rows if the pool runs dry; victims requeue at the
+        FRONT with a clean restart), run one fused decode chunk, stream its
+        tokens, then evict rows that finished inside it.  Exactly one host
+        transfer per chunk.  Returns the finished requests.
         """
         if extra_inputs and any(r.row is None for r in self._queue):
             raise ValueError(
                 "extra_inputs needs every request submitted with row= "
                 "(its index into the extra arrays); generate() does this")
         self._ensure_pool()
-        results: Dict[int, List[int]] = {}
+        finished: List[_Request] = []
         active: Dict[int, _Request] = {}        # slot -> request
         eos = self.cfg.eos_token
         try:
-            while self._queue or active:
+            while True:
+                self._poll_ingest()
+                if not (self._queue or active):
+                    break
                 if self._queue:
                     key = self._admit_batch(active, extra_inputs, key)
                 preempted = self._csched.ensure_chunk_pages(self._chunk)
@@ -831,53 +1060,112 @@ class Engine:
                     req = active.pop(row.slot)
                     self._sched.evict(req)
                     req.tokens = None
+                    req.t_first = None
+                    req.prefix_hit = None
+                    req.cached_prefix_tokens = 0
                     self._queue.insert(0, req)
                 if not active:
                     continue        # preemption freed the pool; re-admit
                 key, buf_h, lens_h = self._run_chunk(key)
+                now = time.perf_counter()
                 for slot in list(active):
                     req = active[slot]
                     row = self._csched.rows[slot]
                     n = int(lens_h[slot])
                     emitted = [int(t) for t in buf_h[slot, :n]]
+                    base = len(req.tokens)
                     req.tokens.extend(emitted)
+                    if emitted and req.t_first is None:
+                        req.t_first = now
+                    if req.stream is not None:
+                        for j, t in enumerate(emitted):
+                            req.stream(api.StreamEvent(req.rid, t, base + j))
                     self._stats["tokens_generated"] += n
                     row.length += n
                     row.budget_left -= n
                     if row.budget_left <= 0 or (eos is not None
                                                 and eos in emitted):
-                        results[req.rid] = req.tokens
+                        reason = (api.FINISH_STOP
+                                  if eos is not None and eos in emitted
+                                  else api.FINISH_LENGTH)
                         self._csched.evict(row)
                         self._sched.evict(req)
                         del active[slot]
-        except Exception:
+                        self._finish_request(req, reason, now)
+                        finished.append(req)
+        except Exception as exc:
             # Free every live row (pages AND slots) so one bad request
-            # can't brick the pool for the next call.
+            # can't brick the pool for the next call; fail their handles
+            # so server-mode waiters aren't stranded.
             for slot in list(active):
                 req = active.pop(slot)
                 row = self._csched.rows.get(slot)
                 if row is not None:
                     self._csched.evict(row)
                 self._sched.evict(req)
+                if req.handle is not None and not req.handle.done:
+                    req.handle._set_error(exc)
             raise
-        return results
+        return finished
 
     def _admit_batch(self, active: Dict[int, "_Request"],
                      extra_inputs: Optional[Dict[str, jax.Array]],
                      key: jax.Array) -> jax.Array:
         """Admit every queue-head request that fits (slot + prompt pages),
-        then prefill them all in ONE batched call and insert their prompt
-        KV, fixed-leaf rows and first sampled token into the live state."""
+        consult the prefix cache for each, then prefill the misses in ONE
+        batched call and insert their prompt KV, fixed-leaf rows and first
+        sampled token into the live state.
+
+        Prefix-cache composition (all host bookkeeping):
+
+        * the head's cached prefix pages count as *shared* for the
+          capacity check — a mostly-cached long prompt admits into a
+          nearly-full pool;
+        * when the head still doesn't fit, the cache evicts LRU entries
+          before admission blocks (matching entries are re-resolved each
+          retry — the evicted item may have been the match);
+        * full-prompt hits skip the batched prefill entirely
+          (:meth:`_restore_hits`); partial hits prefill the whole prompt
+          for exactness but redirect shared-column writes to TRASH;
+        * every prefilled prompt (cache enabled, no extras) is inserted
+          back into the cache while its pages are known-live.
+        """
         admitted: List[_Request] = []
-        while self._queue and self._csched.can_admit(
-                len(self._queue[0].prompt)):
+        hits = []                       # (req, RowState, cache entry)
+        caching = self._prefix is not None and not extra_inputs
+        while self._queue:
+            nxt = self._queue[0]
+            m = self._prefix.match(nxt.prompt) if caching else None
+            shared = list(m.pages) if m is not None else []
+            if not self._csched.can_admit(len(nxt.prompt),
+                                          shared_pages=len(shared)):
+                # only sacrifice cached pages for a PAGE shortage — a busy
+                # slot frees itself at the next chunk boundary, and evicting
+                # for it would churn the cache to no benefit
+                if (self._csched.free_slots > 0
+                        and self._prefix is not None
+                        and self._prefix.evict_one()):
+                    continue
+                break
             req = self._queue.pop(0)
-            row = self._csched.admit(req.rid, len(req.prompt), req.max_new)
+            row = self._csched.admit(req.rid, len(req.prompt), req.max_new,
+                                     shared_pages=shared)
             self._sched.admit(req)      # lockstep: same smallest-free slot
             assert req.slot == row.slot
             req.tokens = []
             active[row.slot] = req
-            admitted.append(req)
+            if caching:
+                self._prefix.record_admit(m, len(req.prompt))
+            if m is not None:
+                req.prefix_hit = (api.PREFIX_HIT_FULL if m.full
+                                  else api.PREFIX_HIT_PARTIAL)
+                req.cached_prefix_tokens = m.tokens
+            if m is not None and m.full:
+                hits.append((req, row, m.entry))
+            else:
+                admitted.append(req)
+        if hits:
+            key = self._restore_hits(hits, key)
         if not admitted:
             return key
 
@@ -890,7 +1178,10 @@ class Engine:
         kv_start = np.full((b,), plen, np.int32)
         # Prompt-KV destinations: batch rows not admitted THIS call (and pad
         # columns of admitted rows) write to the TRASH page; real columns
-        # map straight into the row's block table.
+        # map straight into the row's block table.  Columns covered by a
+        # partial prefix hit ALSO write to TRASH — their pages are shared
+        # read-only with the cache, and the cached KV is already what this
+        # prefill would write (pages-written saving, dedup'd pool memory).
         dest = np.broadcast_to(TRASH_PAGE * page + np.arange(plen) % page,
                                (b, plen)).astype(np.int32).copy()
         for r in admitted:
@@ -898,9 +1189,11 @@ class Engine:
             np_prompt = len(r.prompt)
             toks[r.slot, plen - np_prompt:] = r.prompt
             kv_start[r.slot] = plen - np_prompt
-            logical = np.arange(np_prompt)
+            shared_toks = (r.cached_prefix_tokens
+                           if r.prefix_hit == api.PREFIX_HIT_PARTIAL else 0)
+            logical = np.arange(shared_toks, np_prompt)
             pages = np.asarray(row.pages, np.int64)
-            dest[r.slot, plen - np_prompt:] = (
+            dest[r.slot, plen - np_prompt + shared_toks:] = (
                 pages[logical // page] * page + logical % page)
         # slot_map pads with the out-of-range index b: JAX clamps it on
         # gather (the garbage row is immediately discarded) and drops it on
@@ -926,7 +1219,8 @@ class Engine:
         from repro.profiling import annotate
         t0 = time.perf_counter()
         with annotate("serve.prefill_admit"):
-            self._pools, self._fixed, self._cur, key = self._admit_fn(
+            (self._pools, self._fixed, self._cur, key,
+             logits0) = self._admit_fn(
                 self.params, batch, scratch, self._pools, self._fixed,
                 self._cur, key, jnp.asarray(dest), jnp.asarray(slot_map))
             if cfg.profile:
@@ -935,6 +1229,13 @@ class Engine:
                 jax.block_until_ready(self._cur)   # analysis: allow(TP001)
         self._stats["prefill_seconds"] += time.perf_counter() - t0
         self._stats["admission_prefills"] += 1
+        if caching:
+            # Insert while the rows' pages are known-live: the cache takes
+            # its own refs, so the entries outlive the rows.
+            for r in admitted:
+                row = self._csched.rows[r.slot]
+                self._prefix.insert(r.prompt, row.pages, logits0[r.slot],
+                                    self._slice_fixed_row(r.slot))
         return key
 
     def _run_chunk(self, key: jax.Array):
@@ -1009,19 +1310,23 @@ class Engine:
                         f"extra input {name!r} leading dim {arr.shape[0]} != "
                         f"len(prompts) {len(prompts)}")
         t0 = time.perf_counter()
-        rids = [self.submit(p, max_new_tokens, row=i)
-                for i, p in enumerate(prompts)]
+        handles = [self.submit(api.Request(prompt=list(p),
+                                           max_new_tokens=max_new_tokens,
+                                           row=i))
+                   for i, p in enumerate(prompts)]
         try:
-            results = self.run(extra_inputs)
+            self.run(extra_inputs)
         except Exception:
             # drop this call's unserved requests — they must not leak into
             # (and mis-index the extras of) the next call
-            rid_set = set(rids)
+            rid_set = {h.request_id for h in handles}
             self._queue = [r for r in self._queue if r.rid not in rid_set]
             raise
         self._stats["generate_calls"] += 1
         self._stats["total_seconds"] += time.perf_counter() - t0
-        return [results[rid] for rid in rids]
+        # handles resolved synchronously by the drain above; timeout=0
+        # turns a (would-be) bug into a fast failure instead of a hang
+        return [h.result(timeout=0).tokens for h in handles]
 
     # -- one wave: prefill + fused decode + single fetch -----------------
     def _run_wave(self, wave: List[_Request],
@@ -1059,6 +1364,11 @@ class Engine:
             self._sched.admit(r)
         try:
             self._decode_wave(wave, extra_inputs, key, plen, width)
+        except Exception as exc:
+            for r in wave:
+                if r.handle is not None and not r.handle.done:
+                    r.handle._set_error(exc)
+            raise
         finally:
             # free slots even when prefill/decode throws — one bad request
             # must never brick the pool
@@ -1129,14 +1439,40 @@ class Engine:
         self._stats["prefill_seconds"] += t1 - t0
         self._stats["decode_seconds"] += t2 - t1
 
+        eos = cfg.eos_token
+        now = time.perf_counter()
         for r in wave:
             n = int(lens_h[r.slot])
             r.tokens = [int(t) for t in buf_h[r.slot, :n]]
             self._stats["tokens_generated"] += n
+            # Wave scheduling streams at wave granularity: every token
+            # becomes host-visible at the wave's single transfer, so the
+            # callback fires for all of them here (the continuous path
+            # streams at chunk granularity instead).
+            r.t_first = now if n else None
+            if r.stream is not None:
+                for j, t in enumerate(r.tokens):
+                    r.stream(api.StreamEvent(r.rid, t, j))
+            reason = (api.FINISH_STOP if eos is not None and eos in r.tokens
+                      else api.FINISH_LENGTH)
+            self._finish_request(r, reason, now)
+
+    # -- prefix-cache control --------------------------------------------
+    def clear_prefix_cache(self) -> None:
+        """Release every cache-pinned page (cold-cache reset).  Live rows
+        keep their refs; parity tests and benchmarks use this to compare
+        warm vs cold runs on one engine."""
+        if self._prefix is not None:
+            self._prefix.clear()
 
     # -- telemetry -------------------------------------------------------
     def stats(self) -> Dict[str, object]:
         """Counters + tuned-block lookup provenance, as one plain dict.
+
+        The key set is VERSIONED and frozen per
+        :mod:`repro.serve.stats_schema` (``schema_version`` carries the
+        version; the ST001 analysis check and
+        :func:`repro.serve.stats_schema.validate_stats` both gate drift).
 
         Beyond the raw counters (requests, tokens, waves, timings), the
         tuning-framework telemetry:
@@ -1165,7 +1501,9 @@ class Engine:
         """
         from repro.core.registry import GLOBAL_REGISTRY
         from repro.launch.mesh import describe_mesh
+        from repro.serve.prefix_cache import PrefixCache
         out = dict(self._stats)
+        out["schema_version"] = SCHEMA_VERSION
         out["hardware"] = self.hardware
         out["hardware_platform"] = self._platform
         out["mesh"] = describe_mesh(self.mesh)
@@ -1193,6 +1531,7 @@ class Engine:
             out["capacity_tokens"] = self._capacity_tokens
             out["page_size"] = self._page_size
             out["page_size_source"] = self._page_size_source
+            out["pages"] = None
             if self._alloc is not None:
                 out["pages"] = {
                     "page_size": self._alloc.page_size,
@@ -1204,10 +1543,20 @@ class Engine:
                     "alloc_count": self._alloc.alloc_count,
                     "free_count": self._alloc.free_count,
                 }
-            if self._csched is not None:
-                out["admissions"] = self._csched.admissions
-                out["evictions"] = self._csched.evictions
-                out["preemptions"] = self._csched.preemptions
+            out["admissions"] = (self._csched.admissions
+                                 if self._csched is not None else 0)
+            out["evictions"] = (self._csched.evictions
+                                if self._csched is not None else 0)
+            out["preemptions"] = (self._csched.preemptions
+                                  if self._csched is not None else 0)
+        out["prefix_cache"] = (self._prefix.stats()
+                               if self._prefix is not None
+                               else PrefixCache.disabled_stats())
+        out["latency"] = {
+            "count": len(self._lat_tok),
+            "ttft_s": _percentiles(self._lat_ttft),
+            "tok_per_s": _percentiles(self._lat_tok),
+        }
         out["slots"] = self.cfg.max_batch
         out["slots_admitted"] = self._sched.admitted
         out["slots_evicted"] = self._sched.evicted

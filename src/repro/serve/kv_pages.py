@@ -14,15 +14,25 @@ scheduler are plain bookkeeping driven between fused decode chunks, which is
 what makes them property-testable without touching a model.  The scheduler's
 contract (enforced by ``tests/test_kv_pages.py``):
 
-* **no double allocation** — a page is owned by at most one request, and the
-  reserved NULL/TRASH pages are never handed out;
+* **no double allocation** — a page leaves the free list exactly once, and
+  the reserved NULL/TRASH pages are never handed out;
 * **FIFO admission** — requests enter service in submit order (preemption
   requeues at the front, so it can only *re*-order a victim earlier, never
   starve it);
-* **pages always return** — eviction and preemption free the exact pages
-  allocated, so a drained scheduler always restores full capacity;
+* **pages always return** — eviction and preemption release the exact pages
+  allocated, so a drained scheduler (with an empty prefix cache) always
+  restores full capacity;
 * **capacity is never exceeded** — admission + lazy decode growth never
   allocate past the pool.
+
+Pages are **refcounted** so the prefix cache (:mod:`repro.serve
+.prefix_cache`) can pin prefilled prompt pages while live rows share them
+read-only: ``alloc`` hands a page out at refcount 1, ``ref`` adds holders,
+and ``free`` drops one holder — the page returns to the free list only when
+the last holder lets go.  Under pool pressure the scheduler asks the cache
+to give pages back first (the ``reclaim`` hook) and preempts live rows only
+after the cache is dry, which preserves the pre-cache termination argument
+("the oldest row always fits").
 
 Two pages are reserved for the device-side gather/scatter encoding:
 
@@ -74,7 +84,7 @@ class PageAllocator:
         self.usable_pages = pages_for(capacity_tokens, page_size)
         self.num_pages = RESERVED_PAGES + self.usable_pages
         self._free: List[int] = list(range(RESERVED_PAGES, self.num_pages))
-        self._live: set = set()
+        self._refs: Dict[int, int] = {}    # live page -> holder count
         self.alloc_count = 0
         self.free_count = 0
         self.high_water_pages = 0
@@ -102,22 +112,39 @@ class PageAllocator:
                 f"(pool: {self.usable_pages} x {self.page_size} tokens)")
         pages, self._free = self._free[:n], self._free[n:]
         for p in pages:
-            if p in self._live or p < RESERVED_PAGES:
+            if p in self._refs or p < RESERVED_PAGES:
                 raise RuntimeError(f"page {p} double-allocated")
-            self._live.add(p)
+            self._refs[p] = 1
         self.alloc_count += n
         self.high_water_pages = max(self.high_water_pages, self.used_pages)
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def ref(self, pages: List[int]) -> None:
+        """Add one holder to each (already-live) page — used when a row
+        shares prefix-cache pages, or the cache pins a row's pages."""
         for p in pages:
-            if p not in self._live:
+            if p not in self._refs:
+                raise RuntimeError(f"page {p} ref'd but not live")
+            self._refs[p] += 1
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def free(self, pages: List[int]) -> None:
+        """Drop one holder per page; pages return to the free list (and
+        count toward ``free_count``) only when their last holder lets go."""
+        released = []
+        for p in pages:
+            if p not in self._refs:
                 raise RuntimeError(
                     f"page {p} freed but not live (double free or foreign)")
-            self._live.remove(p)
-        self._free.extend(pages)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                released.append(p)
+        self._free.extend(released)
         self._free.sort()
-        self.free_count += len(pages)
+        self.free_count += len(released)
 
 
 @dataclasses.dataclass
@@ -154,16 +181,38 @@ class ContinuousScheduler:
         self.admissions = 0
         self.evictions = 0
         self.preemptions = 0
+        # Optional pool-pressure escape hatch: ``reclaim(need_pages)`` asks
+        # an external pin holder (the prefix cache) to release pages; it
+        # returns True iff it made progress.  Consulted before preemption.
+        self.reclaim: Optional[object] = None
 
     # -- admission ------------------------------------------------------
-    def can_admit(self, prompt_len: int) -> bool:
-        return bool(self._free_slots) and self.alloc.can_alloc(
-            pages_for(prompt_len, self.alloc.page_size))
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
 
-    def admit(self, rid: int, prompt_len: int, budget: int) -> RowState:
+    def can_admit(self, prompt_len: int, shared_pages: int = 0) -> bool:
+        """Whether the queue head fits right now.  ``shared_pages`` counts
+        block-table entries served by the prefix cache (already live, so
+        they need a ref, not an allocation)."""
+        need = pages_for(prompt_len, self.alloc.page_size) - shared_pages
+        return bool(self._free_slots) and self.alloc.can_alloc(max(need, 0))
+
+    def admit(self, rid: int, prompt_len: int, budget: int,
+              shared_pages: Optional[List[int]] = None) -> RowState:
+        """Admit one request.  ``shared_pages`` (prefix-cache hit) become
+        the head of the row's block table with a ref taken on each; only
+        the remainder is freshly allocated."""
         if not self._free_slots:
             raise RuntimeError("no free slot")
-        pages = self.alloc.alloc(pages_for(prompt_len, self.alloc.page_size))
+        shared = list(shared_pages or [])
+        need = pages_for(prompt_len, self.alloc.page_size) - len(shared)
+        if need < 0:
+            raise ValueError(
+                f"{len(shared)} shared pages exceed the "
+                f"{pages_for(prompt_len, self.alloc.page_size)} the prompt needs")
+        self.alloc.ref(shared)
+        pages = shared + self.alloc.alloc(need)
         slot = self._free_slots.pop(0)
         row = RowState(rid=rid, slot=slot, length=prompt_len,
                        budget_left=budget, pages=pages, admit_seq=self._seq)
@@ -179,9 +228,12 @@ class ContinuousScheduler:
 
         Returns the preempted rows (pages freed, removed from service) —
         the caller requeues them at the queue *front* so FIFO order over
-        first admissions is preserved.  Oldest-first service plus the
-        submit-time capacity check guarantee the oldest row always fits, so
-        this terminates and nothing starves.
+        first admissions is preserved.  Under pressure the ``reclaim`` hook
+        (prefix-cache eviction) runs first and preemption only starts once
+        it stops making progress, so cached-but-idle pages are always
+        sacrificed before live work.  Oldest-first service plus the
+        submit-time capacity check guarantee the oldest row always fits
+        once the cache is dry, so this terminates and nothing starves.
         """
         preempted: List[RowState] = []
         for row in sorted(self.rows.values(), key=lambda r: r.admit_seq):
@@ -195,6 +247,8 @@ class ContinuousScheduler:
                     if need > 0:
                         row.pages.extend(self.alloc.alloc(need))
                     break
+                if self.reclaim is not None and self.reclaim(need):
+                    continue
                 victim = max(self.rows.values(), key=lambda r: r.admit_seq)
                 self._preempt(victim)
                 preempted.append(victim)

@@ -273,3 +273,48 @@ def test_repo_lint_matches_committed_baseline():
     new, _fixed = ratchet(errors, load_baseline())
     assert new == [], "new lint errors beyond tests/analysis_baseline.json:" \
         "\n" + "\n".join(f.render() for f in new)
+
+
+# ---------------------------------------------------------------------------
+# ST001: stats emission vs the versioned schema
+# ---------------------------------------------------------------------------
+
+_SYNTH_ENGINE = '''
+class Engine:
+    def __init__(self):
+        self._stats = {"requests": 0, "tokens_generated": 0}
+
+    def stats(self):
+        out = dict(self._stats)
+        out["scheduler"] = "wave"
+        out["bogus_key"] = 1
+        return out
+'''
+
+
+def test_st001_scan_sees_seed_literal_and_subscript_stores(tmp_path):
+    from repro.analysis.stats_checks import emitted_stats_keys
+    path = tmp_path / "engine.py"
+    path.write_text(_SYNTH_ENGINE)
+    keys, line = emitted_stats_keys(str(path))
+    assert {"requests", "tokens_generated", "scheduler", "bogus_key"} == keys
+    assert line > 0
+
+
+def test_st001_flags_drift_in_both_directions(tmp_path):
+    from repro.analysis.stats_checks import check_stats_schema
+    (tmp_path / "sub").mkdir()
+    (tmp_path / "sub" / "engine.py").write_text(_SYNTH_ENGINE)
+    found = check_stats_schema(str(tmp_path), os.path.join("sub", "engine.py"))
+    scopes = {f.scope for f in found}
+    assert "stats.bogus_key" in scopes          # emitted, not documented
+    assert "stats.schema_version" in scopes     # documented, not emitted
+    assert all(f.check_id == "ST001" and f.severity == SEV_ERROR
+               for f in found)
+
+
+def test_st001_live_engine_matches_schema_exactly():
+    """The gate CI runs: the real engine.py and stats_schema agree."""
+    from repro.analysis.stats_checks import check_stats_schema
+    found = check_stats_schema(REPO_ROOT)
+    assert found == [], "\n".join(f.render() for f in found)

@@ -233,6 +233,31 @@ def test_sharded_init_matches_unsharded_values():
 
 
 @needs_8
+def test_mesh_streaming_and_warm_cache_parity():
+    """The serving front-end composes with sharding: streamed tokens on a
+    data=4,model=2 mesh equal the single-device batch output, and a second
+    (warm, full-hit) pass through the prefix cache serves the exact same
+    tokens — layout and caching are both invisible in the output."""
+    from repro.serve import Request, Server
+    _, _, base, prompts, _ = _build("llama3.2-1b")
+    _, _, meshed, _, _ = _build("llama3.2-1b", mesh="data=4,model=2")
+    expected = base.generate(prompts, 5)
+    for wanted_hits in (0, len(prompts)):      # cold pass, then warm pass
+        before = meshed.stats()["prefix_cache"]["hits_full"]
+        events = [[] for _ in prompts]
+        with Server(meshed) as srv:
+            handles = [srv.submit(Request(prompt=p, max_new_tokens=5,
+                                          stream=events[i].append))
+                       for i, p in enumerate(prompts)]
+            results = [h.result(timeout=600) for h in handles]
+        assert [r.tokens for r in results] == expected
+        assert [[e.token for e in ev if not e.finished]
+                for ev in events] == expected
+        hits = meshed.stats()["prefix_cache"]["hits_full"] - before
+        assert hits >= wanted_hits
+
+
+@needs_8
 def test_per_token_sync_baseline_mesh_parity():
     """The serving benchmark's sync baseline accepts a mesh so the headline
     ratio compares execution models at fixed placement — sharding it must

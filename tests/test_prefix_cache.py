@@ -1,0 +1,206 @@
+"""Prefix cache: trie/refcount invariants (host-side, randomized) and
+engine-level parity — a warm cache must never change a single token.
+
+The host-side suite drives :class:`repro.serve.prefix_cache.PrefixCache`
+directly against a :class:`PageAllocator` with randomized insert/match/
+evict/clear interleavings and checks the pin bookkeeping: every pinned
+page stays live exactly while the trie references it, ``clear()`` returns
+the pool to its pre-cache state, and eviction is LRU over entries +
+childless chunk nodes.
+
+The engine-level suite is the acceptance bar from the tentpole: serving
+with a WARM cache (full hits, partial hits, COW tail divergence) is
+token-for-token identical to a cold engine — greedy restart exactness,
+page-spanning prefixes included.
+"""
+import random
+
+import jax
+import pytest
+
+from repro.configs.catalog import ARCHITECTURES
+from repro.models import build_model
+from repro.serve import Engine, Request, ServeConfig
+from repro.serve.kv_pages import PageAllocator
+from repro.serve.prefix_cache import PrefixCache
+from repro.testing import given, settings, strategies as st
+
+
+# ---------------------------------------------------------------------------
+# host-side trie/refcount properties (no engine, no device work)
+# ---------------------------------------------------------------------------
+
+def _sim_row_pages(alloc: PageAllocator, prompt_len: int, page: int):
+    """What the scheduler would hand a freshly-prefilled row."""
+    from repro.serve.kv_pages import pages_for
+    return alloc.alloc(pages_for(prompt_len, page))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_refcounts_never_leak_under_random_interleaving(seed):
+    """Random insert/free/evict/clear schedules: pages pinned by the cache
+    stay live while referenced, and after row-free + clear() the pool is
+    exactly as empty as it started (alloc_count == free_count)."""
+    rng = random.Random(seed)
+    page = rng.choice([2, 4])
+    alloc = PageAllocator(capacity_tokens=page * 32, page_size=page)
+    cache = PrefixCache(alloc)
+    live_rows = []
+    for _ in range(rng.randint(5, 25)):
+        op = rng.random()
+        if op < 0.5 and alloc.free_pages > 8:
+            plen = rng.randint(1, 3 * page)
+            prompt = [rng.randint(1, 9) for _ in range(plen)]
+            pages = _sim_row_pages(alloc, plen, page)
+            cache.insert(prompt, pages, logits0=None, fixed=None)
+            live_rows.append(pages)
+        elif op < 0.7 and live_rows:
+            alloc.free(live_rows.pop(rng.randrange(len(live_rows))))
+        elif op < 0.85:
+            cache.evict_one()
+        else:
+            cache.clear()
+        # pinned pages are live by definition; they can never outnumber
+        # the pool's live pages
+        assert cache.pinned_pages <= alloc.used_pages
+    for pages in live_rows:
+        alloc.free(pages)
+    cache.clear()
+    assert alloc.used_pages == 0
+    assert alloc.free_pages == alloc.usable_pages
+    assert alloc.alloc_count == alloc.free_count
+    assert cache.stats()["pinned_pages"] == 0
+
+
+def test_insert_dedup_and_shared_refcounts():
+    """Two prompts sharing a full-page prefix share ONE trie node; the
+    shared page's refcount reflects both the rows and the single pin."""
+    page = 4
+    alloc = PageAllocator(capacity_tokens=64, page_size=page)
+    cache = PrefixCache(alloc)
+    shared = [1, 2, 3, 4]
+    pages_a = _sim_row_pages(alloc, 6, page)
+    cache.insert(shared + [5, 6], pages_a, None, None)
+    assert cache.stats()["nodes"] == 1 and cache.stats()["entries"] == 1
+    # row A's head page is pinned once by the trie on top of the row's ref
+    assert alloc.refcount(pages_a[0]) == 2
+    pages_b = _sim_row_pages(alloc, 6, page)
+    cache.insert(shared + [7, 8], pages_b, None, None)
+    st_ = cache.stats()
+    assert st_["nodes"] == 1          # shared chunk deduped
+    assert st_["entries"] == 2
+    # B's head page was NOT pinned (the trie already owns A's copy)
+    assert alloc.refcount(pages_b[0]) == 1
+    m = cache.match(shared + [9])
+    assert m is not None and not m.full
+    assert m.pages == [pages_a[0]] and m.tokens == page
+
+
+def test_lru_eviction_prefers_oldest_and_frees_pages():
+    page = 2
+    alloc = PageAllocator(capacity_tokens=32, page_size=page)
+    cache = PrefixCache(alloc)
+    rows = []
+    for i in range(3):
+        prompt = [10 + i, 20 + i, 30 + i]          # distinct 1-chunk + tail
+        pages = _sim_row_pages(alloc, 3, page)
+        rows.append(pages)
+        cache.insert(prompt, pages, None, None)
+    cache.match([10, 20, 30])                      # touch entry 0: now MRU
+    for pages in rows:
+        alloc.free(pages)
+    used_before = alloc.used_pages
+    assert cache.evict_one()                       # evicts entry 1 (oldest)
+    assert cache.match([11, 21, 31]) is None or \
+        not cache.match([11, 21, 31]).full
+    assert cache.match([10, 20, 30]).full          # the touched one survives
+    assert alloc.used_pages < used_before
+    while cache.evict_one():
+        pass
+    assert alloc.used_pages == 0
+
+
+def test_reclaim_reports_progress_only_on_eviction():
+    page = 2
+    alloc = PageAllocator(capacity_tokens=8, page_size=page)   # 4 pages
+    cache = PrefixCache(alloc)
+    assert cache.reclaim(1) is False               # empty cache: no progress
+    pages = _sim_row_pages(alloc, 4, page)         # 2 pages
+    cache.insert([1, 2, 3, 4], pages, None, None)
+    alloc.free(pages)                              # cache holds the only refs
+    grab = alloc.alloc(2)                          # pool: 2 cached + 2 row
+    assert not alloc.can_alloc(2)
+    assert cache.reclaim(2) is True                # evicts to make room
+    assert alloc.can_alloc(2)
+    alloc.free(grab)
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: a warm cache never changes a token
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_engine_pair():
+    """One cached and one cache-disabled engine over identical params."""
+    cfg = ARCHITECTURES["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    warm = Engine(model, params, ServeConfig(max_batch=3, max_len=64,
+                                             page_size=4))
+    cold = Engine(model, params, ServeConfig(max_batch=3, max_len=64,
+                                             page_size=4,
+                                             prefix_cache=False))
+    return cfg, warm, cold
+
+
+def _gen(eng, prompts, n=5):
+    handles = [eng.submit(Request(prompt=p, max_new_tokens=n))
+               for p in prompts]
+    eng.run()
+    return [h.result(timeout=0).tokens for h in handles]
+
+
+def test_warm_cache_parity_randomized_shared_prefixes(small_engine_pair):
+    """Randomized page-spanning shared prefixes, served twice on the warm
+    engine (miss pass + full/partial-hit pass): every pass matches the
+    cache-disabled engine token-for-token."""
+    cfg, warm, cold = small_engine_pair
+    rng = random.Random(1234)
+    for trial in range(3):
+        plen = rng.randint(5, 11)                  # spans 1-2 pages at 4
+        prefix = [rng.randrange(1, cfg.vocab_size) for _ in range(plen)]
+        batch = [prefix + [rng.randrange(1, cfg.vocab_size)
+                           for _ in range(rng.randint(0, 3))]
+                 for _ in range(3)]
+        expected = _gen(cold, batch)
+        assert _gen(warm, batch) == expected, f"miss pass, trial {trial}"
+        assert _gen(warm, batch) == expected, f"hit pass, trial {trial}"
+        st_ = warm.stats()["prefix_cache"]
+        assert st_["hits_full"] > 0                # the rerun actually hit
+
+
+def test_cow_divergence_after_full_hit_is_exact(small_engine_pair):
+    """A full hit COWs the tail page; a later prompt diverging INSIDE that
+    page must not see the first request's decoded tokens bleed through."""
+    cfg, warm, cold = small_engine_pair
+    base = [3, 1, 4, 1, 5, 9]                      # page 4: tail = (5, 9)
+    div = base[:5] + [7]                           # diverges inside page 2
+    expected = _gen(cold, [base])
+    assert _gen(warm, [base]) == expected          # insert
+    assert _gen(warm, [base]) == expected          # full hit + COW tail
+    # divergence: partial hit on page 1 only; tail prefills fresh
+    assert _gen(warm, [div]) == _gen(cold, [div])
+    # and the original entry still serves exactly the original tokens
+    assert _gen(warm, [base]) == expected
+
+
+def test_engine_refcounts_drain_clean(small_engine_pair):
+    """After any mix of hits/misses, clearing the cache returns every page:
+    the allocator's alloc/free ledgers balance (nothing leaked)."""
+    _, warm, _ = small_engine_pair
+    warm.clear_prefix_cache()
+    st_ = warm.stats()["pages"]
+    assert st_["used_pages"] == 0
+    assert st_["alloc_count"] == st_["free_count"]
+    assert warm.stats()["prefix_cache"]["pinned_pages"] == 0

@@ -1,0 +1,231 @@
+"""Typed request/response API and the streaming server front-end.
+
+Covers the redesigned public surface end to end: ``submit(Request)`` →
+``RequestHandle`` → ``run()`` → sorted ``GenerationResult`` list; the legacy
+positional shim (works, warns exactly once per process); Request-level
+temperature assertions; the versioned stats schema validating clean on live
+engines of both schedulers; and the :class:`Server` — threaded ingestion,
+per-token ``StreamEvent`` callbacks token-for-token equal to batch results
+across every model family, and its failure modes (extras rejection,
+double-start, submit-after-stop).
+"""
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.catalog import ARCHITECTURES
+from repro.models import build_model
+from repro.serve import (Engine, GenerationResult, Request, RequestHandle,
+                         ServeConfig, Server, StreamEvent, stats_schema)
+from repro.serve import api
+
+
+def _build(arch="llama3.2-1b", **serve_kw):
+    cfg = ARCHITECTURES[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    kw = dict(max_batch=3, max_len=64)
+    kw.update(serve_kw)
+    return cfg, model, params, Engine(model, params, ServeConfig(**kw))
+
+
+RAGGED = [[5, 9, 2, 7], [1, 3, 3], [2, 4, 6, 8, 1, 5, 3]]
+
+# one representative per model family (dense / moe / vlm / audio / hybrid)
+FLASH_FAMILIES = ["llama3.2-1b", "olmoe-1b-7b", "llama-3.2-vision-11b",
+                  "whisper-large-v3", "zamba2-2.7b"]
+
+
+# ---------------------------------------------------------------------------
+# typed submit/run surface
+# ---------------------------------------------------------------------------
+
+def test_generation_result_round_trip():
+    """Every field of GenerationResult is populated and self-consistent,
+    and run() returns results sorted by request id."""
+    cfg, model, params, eng = _build()
+    handles = [eng.submit(Request(prompt=p, max_new_tokens=4))
+               for p in RAGGED]
+    assert all(isinstance(h, RequestHandle) for h in handles)
+    results = eng.run()
+    assert [r.request_id for r in results] == \
+        sorted(h.request_id for h in handles)
+    for h, p in zip(sorted(handles, key=lambda h: h.request_id), RAGGED):
+        r = h.result(timeout=0)
+        assert isinstance(r, GenerationResult)
+        assert r.request_id == h.request_id
+        assert len(r.tokens) == 4 or r.finish_reason == api.FINISH_STOP
+        assert r.finish_reason in (api.FINISH_STOP, api.FINISH_LENGTH)
+        assert r.prompt_len == len(p)
+        assert r.total_s >= 0.0 and r.tok_per_s >= 0.0
+        assert r.ttft_s is None or r.ttft_s >= 0.0
+    # typed drains return the tokens the raw engine would have returned
+    assert [h.result(timeout=0).tokens for h in handles] == \
+        eng.generate(RAGGED, 4)
+
+
+def test_unfinished_handle_times_out():
+    cfg, model, params, eng = _build()
+    h = eng.submit(Request(prompt=[1, 2], max_new_tokens=2))
+    assert not h.done
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0)
+    eng.run()
+    assert h.done and h.result(timeout=0).tokens
+
+
+def test_legacy_submit_warns_exactly_once_per_process(monkeypatch):
+    """The deprecated positional surface still works (rid + {rid: tokens})
+    but emits one DeprecationWarning per process, not one per call."""
+    import repro.serve.engine as engine_mod
+    monkeypatch.setattr(engine_mod, "_LEGACY_SUBMIT_WARNED", False)
+    cfg, model, params, eng = _build()
+    with pytest.warns(DeprecationWarning, match="docs/SERVING.md"):
+        rid = eng.submit([5, 9, 2], 3)
+    assert isinstance(rid, int)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rid2 = eng.submit([1, 3, 3], 3)       # second call: silent
+    out = eng.run()
+    assert isinstance(out, dict) and set(out) == {rid, rid2}
+    assert out[rid] == eng.generate([[5, 9, 2]], 3)[0]
+
+
+def test_request_temperature_mismatch_rejected_at_submit():
+    cfg, model, params, eng = _build()           # greedy (temperature 0.0)
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(Request(prompt=[1, 2], max_new_tokens=2, temperature=0.7))
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=2, temperature=0.0))
+    eng.run()                                    # matching assertion is fine
+
+
+def test_typed_submit_rejects_positional_budget():
+    cfg, model, params, eng = _build()
+    with pytest.raises(TypeError, match="set them on the Request"):
+        eng.submit(Request(prompt=[1, 2], max_new_tokens=2), 5)
+
+
+# ---------------------------------------------------------------------------
+# versioned stats schema on live engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["continuous", "wave"])
+def test_live_stats_validate_against_schema(scheduler):
+    """ST001 guards the source statically; this guards the runtime dict:
+    both schedulers emit exactly the documented key set for their mode."""
+    cfg, model, params, eng = _build(scheduler=scheduler)
+    eng.generate(RAGGED, 3)
+    st = eng.stats()
+    assert st["schema_version"] == stats_schema.SCHEMA_VERSION
+    assert stats_schema.validate_stats(st) == []
+
+
+def test_prefix_cache_stats_keys_stable_when_disabled():
+    """Consumers never branch on key presence: a cache-disabled engine
+    reports the same prefix_cache sub-schema, zeroed."""
+    cfg, model, params, eng = _build(prefix_cache=False)
+    eng.generate(RAGGED, 2)
+    pc = eng.stats()["prefix_cache"]
+    assert set(pc) == set(stats_schema.PREFIX_CACHE_KEYS)
+    assert pc["enabled"] is False and pc["hits_full"] == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming server front-end
+# ---------------------------------------------------------------------------
+
+def _stream_collect(eng, prompts, max_new):
+    """Serve ``prompts`` through a Server, collecting per-prompt events."""
+    events = [[] for _ in prompts]
+    results = []
+    with Server(eng) as srv:
+        handles = [srv.submit(Request(prompt=p, max_new_tokens=max_new,
+                                      stream=events[i].append))
+                   for i, p in enumerate(prompts)]
+        results = [h.result(timeout=300) for h in handles]
+    return events, results
+
+
+def _check_stream(events, result):
+    """Event-sequence contract: ordered indices, one terminal event, and
+    the streamed tokens reassemble the final result exactly."""
+    *toks, terminal = events
+    assert [e.index for e in toks] == list(range(len(toks)))
+    assert all(isinstance(e, StreamEvent) and not e.finished and
+               e.request_id == result.request_id for e in toks)
+    assert terminal.finished and terminal.token is None
+    assert terminal.index == len(toks)
+    assert terminal.finish_reason == result.finish_reason
+    assert [e.token for e in toks] == result.tokens
+
+
+@pytest.mark.parametrize("arch", FLASH_FAMILIES)
+def test_streaming_parity_all_families(arch):
+    """Streamed tokens == handle results == plain batch generate, for one
+    representative of every model family.  Families that need extra_inputs
+    (the VLM's image embeddings) stream through the engine directly —
+    extras are per-drain, which the open-ended Server rejects by design —
+    so the per-token callback contract is covered on both paths."""
+    cfg, model, params, eng = _build(arch)
+    prompts = [[t % cfg.vocab_size for t in p] for p in RAGGED]
+    extra = {k: jnp.zeros((len(prompts),) + s.shape[1:], s.dtype)
+             for k, s in model.extra_inputs(len(prompts)).items()}
+    expected = eng.generate(prompts, 5, extra_inputs=extra or None)
+    if extra:
+        events = [[] for _ in prompts]
+        handles = [eng.submit(Request(prompt=p, max_new_tokens=5, row=i,
+                                      stream=events[i].append))
+                   for i, p in enumerate(prompts)]
+        eng.run(extra_inputs=extra)
+        results = [h.result(timeout=0) for h in handles]
+    else:
+        events, results = _stream_collect(eng, prompts, 5)
+    for ev, res, want in zip(events, results, expected):
+        _check_stream(ev, res)
+        assert res.tokens == want, arch
+
+
+def test_stream_callbacks_fire_off_caller_thread():
+    """Events are delivered from the worker thread (host-visible at chunk
+    boundaries), never synchronously from submit()."""
+    cfg, model, params, eng = _build()
+    threads = set()
+    with Server(eng) as srv:
+        h = srv.submit(Request(
+            prompt=[5, 9, 2], max_new_tokens=4,
+            stream=lambda e: threads.add(threading.current_thread().name)))
+        h.result(timeout=300)
+    assert threads == {"serve-worker"}
+
+
+def test_server_ingests_while_draining():
+    """A request submitted after the first drain starts still finishes —
+    the ingest hook folds it into the live batch."""
+    cfg, model, params, eng = _build()
+    oracle = eng.generate([[1, 3, 3]], 3)[0]
+    with Server(eng) as srv:
+        first = srv.submit(Request(prompt=[5, 9, 2, 7], max_new_tokens=12))
+        second = srv.submit(Request(prompt=[1, 3, 3], max_new_tokens=3))
+        r1, r2 = first.result(timeout=300), second.result(timeout=300)
+    assert len(r1.tokens) == 12 or r1.finish_reason == api.FINISH_STOP
+    assert r2.tokens == oracle
+    st = srv.stats()
+    assert st["server"]["submitted"] == 2 and st["server"]["served"] == 2
+    assert st["latency"]["count"] >= 2
+
+
+def test_server_lifecycle_and_rejections():
+    cfg, model, params, eng = _build()
+    srv = Server(eng).start()
+    with pytest.raises(RuntimeError, match="already started"):
+        srv.start()
+    with pytest.raises(ValueError, match="row"):
+        srv.submit(Request(prompt=[1, 2], max_new_tokens=2, row=0))
+    srv.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        srv.submit(Request(prompt=[1, 2], max_new_tokens=2))
+    assert eng._ingest_hook is None              # engine handed back clean
+    eng.generate([[1, 2]], 2)                    # and still serves directly

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs.catalog import ARCHITECTURES
 from repro.models import build_model
-from repro.serve import Engine, ServeConfig, generate_per_prompt
+from repro.serve import Engine, Request, ServeConfig, generate_per_prompt
 
 
 def _build(arch="llama3.2-1b", attention_impl=None, **serve_kw):
@@ -190,15 +190,15 @@ def test_mixed_wave_capacity_no_over_rejection():
     separate waves and complete both."""
     cfg, model, params, eng = _build(max_batch=2, max_len=16,
                                       scheduler="wave")
-    rid_a = eng.submit([1] * 12, 3)     # 12 + 3  = 15 <= 16: fits alone
-    rid_b = eng.submit([2, 3], 12)      # 2  + 12 = 14 <= 16: fits alone
-    results = eng.run()                 # used to raise: 12 + 12 > 16
-    assert len(results[rid_a]) == 3
-    assert len(results[rid_b]) == 12
+    h_a = eng.submit(Request(prompt=[1] * 12, max_new_tokens=3))
+    h_b = eng.submit(Request(prompt=[2, 3], max_new_tokens=12))
+    eng.run()                           # used to raise: 12 + 12 > 16
+    assert len(h_a.result(timeout=0).tokens) == 3
+    assert len(h_b.result(timeout=0).tokens) == 12
     assert eng.stats()["waves"] == 2    # packed apart, not rejected together
     # each request decodes exactly what it decodes alone
-    assert results[rid_a] == eng.generate([[1] * 12], 3)[0]
-    assert results[rid_b] == eng.generate([[2, 3]], 12)[0]
+    assert h_a.result(timeout=0).tokens == eng.generate([[1] * 12], 3)[0]
+    assert h_b.result(timeout=0).tokens == eng.generate([[2, 3]], 12)[0]
 
 
 def test_wave_packing_keeps_compatible_requests_batched():
@@ -207,7 +207,7 @@ def test_wave_packing_keeps_compatible_requests_batched():
     cfg, model, params, eng = _build(max_batch=3, max_len=64,
                                       scheduler="wave")
     for p in RAGGED:
-        eng.submit(p, 5)
+        eng.submit(Request(prompt=p, max_new_tokens=5))
     results = eng.run()
     assert eng.stats()["waves"] == 1
     assert len(results) == 3
@@ -218,11 +218,12 @@ def test_submit_rejects_oversized_request_fast():
     submit() instead of bricking the wave it would have joined."""
     cfg, model, params, eng = _build(max_len=16, scheduler="wave")
     with pytest.raises(ValueError, match="exceeds"):
-        eng.submit([1] * 12, 8)         # 12 + 8 > 16
+        eng.submit(Request(prompt=[1] * 12, max_new_tokens=8))  # 12+8 > 16
     assert eng.stats()["requests"] == 0
     # the queue is untouched: a valid request still round-trips
-    rid = eng.submit([1, 2], 3)
-    assert len(eng.run()[rid]) == 3
+    h = eng.submit(Request(prompt=[1, 2], max_new_tokens=3))
+    eng.run()
+    assert len(h.result(timeout=0).tokens) == 3
 
 
 def test_near_capacity_bucket_clamped_to_max_len():
@@ -244,17 +245,21 @@ def test_near_capacity_bucket_clamped_to_max_len():
 
 def test_submit_run_queue_api():
     cfg, model, params, eng = _build(max_batch=2)
-    rids = [eng.submit(p, 4) for p in RAGGED]
+    handles = [eng.submit(Request(prompt=p, max_new_tokens=4))
+               for p in RAGGED]
     results = eng.run()
-    assert set(results) == set(rids)
-    assert results[rids[0]] == eng.generate([RAGGED[0]], 4)[0]
+    assert sorted(r.request_id for r in results) == \
+        sorted(h.request_id for h in handles)
+    assert handles[0].result(timeout=0).tokens == \
+        eng.generate([RAGGED[0]], 4)[0]
 
 
 def test_run_with_extras_requires_rows():
     cfg, model, params, eng = _build("whisper-large-v3", max_batch=2)
     extra = {k: jax.numpy.zeros((1,) + sds.shape[1:], sds.dtype)
              for k, sds in model.extra_inputs(1).items()}
-    eng.submit([1, 2, 3], 2)                 # no row= -> can't index extras
+    # no row= -> can't index extras
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
     with pytest.raises(ValueError, match="row"):
         eng.run(extra_inputs=extra)
 
@@ -412,7 +417,7 @@ def test_continuous_token_capacity_admits_beyond_max_len():
                                       max_len=32)[0]
     # the pool itself still bounds a single request, at submit time
     with pytest.raises(ValueError, match="exceeds"):
-        eng.submit([1] * 12, 48)
+        eng.submit(Request(prompt=[1] * 12, max_new_tokens=48))
     assert eng.stats()["requests"] == 1      # the rejected one never queued
     with pytest.raises(ValueError, match="exceeds"):
         eng.generate([[1] * 12], 48)
@@ -433,10 +438,14 @@ def test_continuous_stats_report_paged_provenance():
     assert st["preemptions"] == 0
     pages = st["pages"]
     assert pages["page_size"] == 4
-    assert pages["used_pages"] == 0          # drained pool: all pages home
-    assert pages["free_pages"] == pages["usable_pages"]
+    # drained pool: the only pages still out are the prefix cache's pins
+    assert pages["used_pages"] == st["prefix_cache"]["pinned_pages"]
     assert pages["high_water_pages"] > 0
     assert 0.0 <= pages["utilization"] <= 1.0
+    eng.clear_prefix_cache()
+    pages = eng.stats()["pages"]
+    assert pages["used_pages"] == 0          # cache cleared: all pages home
+    assert pages["free_pages"] == pages["usable_pages"]
     assert pages["alloc_count"] == pages["free_count"]
     assert st["chunks"] >= 1
     assert st["admission_prefills"] >= 1
@@ -453,11 +462,15 @@ def test_continuous_preemption_restart_is_exact():
     decode their exact solo tokens (greedy determinism)."""
     cfg, model, params, eng = _build(capacity_tokens=40, page_size=8)
     prompts = RAGGED + [[9, 9, 1]]
-    rids = [eng.submit(p, 10) for p in prompts]
-    results = eng.run()
+    handles = [eng.submit(Request(prompt=p, max_new_tokens=10))
+               for p in prompts]
+    eng.run()
     st = eng.stats()
     assert st["preemptions"] >= 1
-    assert st["pages"]["used_pages"] == 0    # everything returned
-    for rid, p in zip(rids, prompts):
-        assert results[rid] == generate_per_prompt(model, params, [p], 10,
-                                                   max_len=64)[0]
+    # drained: only the prefix cache's pins are still out
+    assert st["pages"]["used_pages"] == st["prefix_cache"]["pinned_pages"]
+    eng.clear_prefix_cache()
+    assert eng.stats()["pages"]["used_pages"] == 0
+    for h, p in zip(handles, prompts):
+        assert h.result(timeout=0).tokens == generate_per_prompt(
+            model, params, [p], 10, max_len=64)[0]
