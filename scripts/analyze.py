@@ -1,208 +1,18 @@
 #!/usr/bin/env python
-"""Static invariant checker CLI — the front door of ``repro.analysis``.
+"""Compatibility shim — the analyzer CLI lives in ``repro.analysis.cli``.
 
-Subcommands::
+Equivalent invocations::
 
-    lint        trace-purity lint (TP00x) over src/repro
-    artifacts   tuned-DB (AR00x) + bench-baseline (BA00x) validation
-    coverage    sharding-rule coverage (SH00x) of all model families
-    stats       Engine.stats() keys vs the versioned schema (ST001)
-    report      all of the above + the committed-baseline ratchet gate
-
-``report`` is what CI runs: errors not present in
-``tests/analysis_baseline.json`` fail the build (exit 1); warnings are
-printed but never fail.  ``--update-baseline`` blesses the current error
-set as the new floor — shrink it, don't grow it.  ``--json FILE`` writes
-the findings (any subcommand) for the step-summary renderer and the
-uploaded artifact.
-
-Run it locally before pushing::
-
-    PYTHONPATH=src python scripts/analyze.py report
-
-Check catalog and waiver workflow: docs/STATIC_ANALYSIS.md.
+    python scripts/analyze.py <cmd>
+    PYTHONPATH=src python -m repro.analysis <cmd>
+    repro-analyze <cmd>                       # installed console script
 """
-from __future__ import annotations
-
-import argparse
-import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-
-
-def _lint_findings():
-    from repro.analysis.callgraph import CallGraph
-    from repro.analysis.purity import PurityChecker
-    graph = CallGraph(REPO_ROOT)
-    findings = PurityChecker(graph).run()
-    return findings, graph
-
-
-def _artifact_findings():
-    from repro.analysis.artifacts import (validate_baselines_dir,
-                                          validate_tuned_dir)
-    out = validate_tuned_dir(os.path.join(REPO_ROOT, "tuned"),
-                             root=REPO_ROOT)
-    out += validate_baselines_dir(
-        os.path.join(REPO_ROOT, "benchmarks", "baselines"), root=REPO_ROOT)
-    return out
-
-
-def _coverage_findings():
-    from repro.analysis.coverage import check_coverage
-    return check_coverage()
-
-
-def _stats_findings():
-    from repro.analysis.stats_checks import check_stats_schema
-    return check_stats_schema(REPO_ROOT)
-
-
-def _emit(findings, args, extra_blob=None):
-    from repro.analysis.findings import SEV_ERROR, sort_findings
-    findings = sort_findings(findings)
-    for f in findings:
-        print(f.render())
-    errors = [f for f in findings if f.severity == SEV_ERROR]
-    warnings = [f for f in findings if f.severity != SEV_ERROR]
-    print(f"[analyze] {len(errors)} error(s), {len(warnings)} warning(s)")
-    if getattr(args, "json", None):
-        blob = {"findings": [f.to_json() for f in findings],
-                "errors": len(errors), "warnings": len(warnings)}
-        blob.update(extra_blob or {})
-        with open(args.json, "w") as fh:
-            json.dump(blob, fh, indent=1, sort_keys=True)
-            fh.write("\n")
-        print(f"[analyze] wrote {args.json}")
-    return errors, warnings
-
-
-def cmd_lint(args):
-    findings, graph = _lint_findings()
-    if args.verbose:
-        for info in graph.traced_functions():
-            print(f"[traced] {info.key}  <- {graph.traced_via[info.key]}")
-    errors, _ = _emit(findings, args,
-                      {"traced_functions": len(graph.traced)})
-    return 1 if errors and args.strict else 0
-
-
-def cmd_artifacts(args):
-    errors, _ = _emit(_artifact_findings(), args)
-    return 1 if errors and args.strict else 0
-
-
-def cmd_coverage(args):
-    from repro.analysis.coverage import coverage_summary
-    findings = _coverage_findings()
-    summary = coverage_summary() if args.summary else None
-    if summary:
-        for family, kinds in summary.items():
-            stat = ", ".join(
-                f"{kind}: {v['sharded']}/{v['leaves']} leaves sharded"
-                for kind, v in kinds.items())
-            print(f"[coverage] {family}: {stat}")
-    errors, _ = _emit(findings, args, {"coverage": summary} if summary
-                      else None)
-    return 1 if errors and args.strict else 0
-
-
-def cmd_stats(args):
-    errors, _ = _emit(_stats_findings(), args)
-    return 1 if errors and args.strict else 0
-
-
-def cmd_report(args):
-    from repro.analysis.findings import (load_baseline, ratchet,
-                                         save_baseline, SEV_ERROR)
-    findings, graph = _lint_findings()
-    findings = (findings + _artifact_findings() + _coverage_findings()
-                + _stats_findings())
-    errors, warnings = _emit(findings, args,
-                             {"traced_functions": len(graph.traced)})
-
-    baseline_path = args.baseline
-    if args.update_baseline:
-        path = save_baseline(errors, baseline_path)
-        print(f"[analyze] baseline blessed -> {path} "
-              f"({len(errors)} finding(s))")
-        return 0
-
-    baseline = load_baseline(baseline_path)
-    new, fixed = ratchet(errors, baseline)
-    if fixed:
-        print(f"[analyze] {len(fixed)} baseline finding(s) no longer fire "
-              f"— ratchet forward with --update-baseline:")
-        for key in fixed:
-            print(f"  fixed: {key}")
-    if new:
-        print(f"[analyze] FAIL: {len(new)} finding(s) not in the baseline "
-              f"({len(baseline)} tolerated):")
-        for f in new:
-            print(f"  new: {f.render()}")
-        print("[analyze] fix them, pragma a sanctioned exception "
-              "(# analysis: allow(<id>)), or — exceptionally — bless with "
-              "--update-baseline")
-        return 1
-    print(f"[analyze] ok: no findings beyond the baseline "
-          f"({len(baseline)} tolerated, {len(warnings)} warning(s))")
-    return 0
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__.split("\n")[1],
-                                 prog="analyze.py")
-    sub = ap.add_subparsers(dest="cmd", required=True)
-
-    def common(p, strict_default=False):
-        p.add_argument("--json", help="write findings JSON to this path")
-        p.add_argument("--strict", action="store_true",
-                       default=strict_default,
-                       help="exit 1 on any error finding (no baseline)")
-
-    p = sub.add_parser("lint", help="trace-purity lint (TP00x)")
-    common(p)
-    p.add_argument("--verbose", action="store_true",
-                   help="also print the traced function set")
-    p.set_defaults(fn=cmd_lint)
-
-    p = sub.add_parser("artifacts",
-                       help="tuned-DB + bench-baseline validation "
-                            "(AR00x/BA00x)")
-    common(p)
-    p.set_defaults(fn=cmd_artifacts)
-
-    p = sub.add_parser("coverage",
-                       help="sharding-rule coverage of model families "
-                            "(SH00x)")
-    common(p)
-    p.add_argument("--summary", action="store_true",
-                   help="print per-family sharded-leaf statistics")
-    p.set_defaults(fn=cmd_coverage)
-
-    p = sub.add_parser("stats",
-                       help="Engine.stats() key set vs the versioned "
-                            "stats schema (ST001)")
-    common(p)
-    p.set_defaults(fn=cmd_stats)
-
-    p = sub.add_parser("report",
-                       help="all checks + the committed-baseline ratchet "
-                            "gate (what CI runs)")
-    p.add_argument("--json", help="write findings JSON to this path")
-    p.add_argument("--baseline",
-                   help="ratchet file (default tests/analysis_baseline.json)")
-    p.add_argument("--update-baseline", action="store_true",
-                   help="bless the current error findings as the new floor")
-    p.set_defaults(fn=cmd_report)
-
-    args = ap.parse_args(argv)
-    return args.fn(args)
-
+from repro.analysis.cli import main  # noqa: E402
 
 if __name__ == "__main__":
     sys.exit(main())

@@ -92,6 +92,36 @@ def _findings_md(path: str, blob: dict) -> list:
     return lines + [""]
 
 
+def _ir_md(path: str, blob: dict) -> list:
+    """IR_REPORT.json from ``repro-analyze ir --json``: one row per traced
+    config cell, then the findings table (usually empty)."""
+    title = os.path.basename(path)
+    gate = "active" if blob.get("hash_gate_active") else \
+        (f"inactive (blessed under jax "
+         f"{blob.get('fingerprint_jax_version')}, running "
+         f"{blob.get('jax_version')})")
+    lines = [f"### `{title}` — {len(blob.get('ir_cases', []))} config(s) "
+             f"dry-traced in {blob.get('seconds', 0):.0f}s, IR005 hash gate "
+             f"{gate}", "",
+             "| config | entries | jit keys | peak MiB | loop collectives "
+             "| err | warn | cached |",
+             "| --- | --- | ---: | ---: | ---: | ---: | ---: | --- |"]
+    for row in blob.get("ir_cases", []):
+        peaks = [p for p in row.get("peak_bytes", {}).values()
+                 if p is not None]
+        peak = f"{max(peaks) / 2**20:.1f}" if peaks else "—"
+        lines.append(
+            f"| `{row['case']}` | {', '.join(row.get('entries', []))} "
+            f"| {row.get('jit_keys', {}).get('total', '?')} | {peak} "
+            f"| {row.get('while_collectives', 0)} | {row.get('errors', 0)} "
+            f"| {row.get('warnings', 0)} "
+            f"| {'yes' if row.get('cached') else 'no'} |")
+    lines.append("")
+    if blob.get("findings") is not None:
+        lines += _findings_md(path, blob)
+    return lines
+
+
 def _profile_md(path: str, blob: dict) -> list:
     title = os.path.basename(path)
     lines = [f"### `{title}` — kind `{blob.get('kind', '?')}`, hardware "
@@ -128,7 +158,9 @@ def main(argv=None) -> int:
         try:
             with open(path) as f:
                 blob = json.load(f)
-            if "findings" in blob:
+            if "ir_cases" in blob:
+                lines = _ir_md(path, blob)
+            elif "findings" in blob:
                 lines = _findings_md(path, blob)
             elif "schema_version" in blob and "scheduler" in blob:
                 lines = _stats_md(path, blob)

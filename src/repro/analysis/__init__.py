@@ -19,10 +19,18 @@ catches rot before a benchmark has to:
 * :mod:`~repro.analysis.coverage` — SH00x sharding-rule coverage of all
   model families' abstract param trees;
 * :mod:`~repro.analysis.findings` — the :class:`Finding` record and the
-  committed-baseline ratchet (``tests/analysis_baseline.json``).
+  committed-baseline ratchet (``tests/analysis_baseline.json``);
+* :mod:`~repro.analysis.pragmas`  — the ``# analysis: allow`` waiver
+  ledger and the PR900 unused-pragma check;
+* :mod:`~repro.analysis.ir`      — IR-level contracts (IR000-IR005): the
+  config matrix is dry-traced (``jit(...).lower()``, no execution) and
+  the lowered jaxpr/HLO checked for collective placement, numerics,
+  memory budget, jit-key fan-out, and program-fingerprint drift.
 
-Entry point: ``scripts/analyze.py`` (``lint | artifacts | coverage |
-report``); catalog and workflow: ``docs/STATIC_ANALYSIS.md``.
+Entry point: :mod:`repro.analysis.cli` — ``python -m repro.analysis``,
+``scripts/analyze.py`` (shim), or the ``repro-analyze`` console script
+(``lint | artifacts | coverage | stats | ir | pragmas | report``);
+catalog and workflow: ``docs/STATIC_ANALYSIS.md``.
 """
 from repro.analysis.findings import (BASELINE_SCHEMA_VERSION, Finding,
                                      SEV_ERROR, SEV_WARNING,

@@ -1,0 +1,36 @@
+"""IR-level program contract checker: dry-trace the config matrix, lint
+the lowered jaxpr/HLO.
+
+The AST lint (:mod:`repro.analysis.purity`) sees source text; the PR 6
+profiler sees one live run.  A whole regression class lives in between —
+visible only in the *traced program*: a collective the partitioner placed
+inside the fused decode loop, a silent dtype promotion, a bucket edit
+that fans the jit cache out.  This package verifies those contracts on
+the lowered IR itself via ``jit(...).lower()``/``.trace()`` — tracing and
+XLA compilation only, **zero device execution** — for every (model family
+x scheduler x mesh x dtype) cell the paper's thesis claims to ship.
+
+Modules:
+
+* :mod:`~repro.analysis.ir.matrix`       — the IRCase config matrix;
+* :mod:`~repro.analysis.ir.trace`        — dry-lowering + the check-ready
+  EntrySummary extraction + the ``.ir_cache/`` summary cache;
+* :mod:`~repro.analysis.ir.checks`       — IR000 (trace failure), IR001
+  (decode-loop collective placement), IR002 (numerics), IR003 (memory
+  budget vs ``HardwareProfile.hbm_bytes``);
+* :mod:`~repro.analysis.ir.recompile`    — IR004 static jit-key
+  enumeration (the static twin of tests/test_recompile_count.py);
+* :mod:`~repro.analysis.ir.fingerprints` — IR005 jaxpr fingerprints vs
+  the committed ``tests/ir_fingerprints.json``;
+* :mod:`~repro.analysis.ir.runner`       — orchestration -> (findings,
+  IR_REPORT blob).
+
+Entry point: ``scripts/analyze.py ir`` / ``python -m repro.analysis ir``;
+catalog and re-bless workflow: docs/STATIC_ANALYSIS.md.
+"""
+from repro.analysis.ir.matrix import (DTYPES, FAMILIES, IRCase, SCHEDULERS,
+                                      default_matrix, smoke_matrix)
+from repro.analysis.ir.runner import run_ir
+
+__all__ = ["DTYPES", "FAMILIES", "IRCase", "SCHEDULERS", "default_matrix",
+           "run_ir", "smoke_matrix"]

@@ -1,0 +1,168 @@
+"""IR005 program fingerprints + the committed ``tests/ir_fingerprints.json``.
+
+Every traced case commits, per entry point, a canonical jaxpr hash and the
+primitive histogram behind it, plus the IR004 static jit-key counts.  An
+unintended trace change — an op sneaking into the fused loop, a remat
+policy flipping, a bucketing edit — fails CI with a *structural* diff
+("+2 convert_element_type, -1 dot_general in decode_chunk") instead of
+silently shifting perf three PRs later.
+
+Blessing workflow (docs/STATIC_ANALYSIS.md): make the change, eyeball the
+diff IR005 prints, then re-bless with::
+
+    PYTHONPATH=src python scripts/analyze.py ir --write-fingerprints
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python scripts/analyze.py ir \\
+        --mesh data=4,model=2 --write-fingerprints
+
+Writes *merge* per case, so the single-device and mesh legs maintain one
+file.  Hashes are only comparable within one jax version (lowering changes
+move them); the file records the version it was blessed under, and on a
+version mismatch IR005 degrades to a warning-severity structural
+comparison instead of failing the gate — IR004 key counts are pure bucket
+math and gate on every version.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding, SEV_ERROR, SEV_WARNING
+from repro.analysis.ir.trace import CaseResult
+
+FINGERPRINT_SCHEMA_VERSION = 1
+
+
+def default_fingerprint_path() -> str:
+    here = os.path.abspath(os.path.dirname(__file__))  # src/repro/analysis/ir
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(here))))
+    return os.path.join(root, "tests", "ir_fingerprints.json")
+
+
+def case_record(case: CaseResult, jit_keys: Dict[str, int]) -> dict:
+    """The per-case blob committed to the fingerprint file."""
+    return {
+        "jit_keys": dict(sorted(jit_keys.items())),
+        "entries": {
+            entry: {"jaxpr_hash": s.jaxpr_hash,
+                    "prims": dict(sorted(s.prim_histogram.items()))}
+            for entry, s in sorted(case.entries.items())
+        },
+    }
+
+
+def load_fingerprints(path: Optional[str] = None) -> dict:
+    path = path or default_fingerprint_path()
+    if not os.path.exists(path):
+        return {"schema_version": FINGERPRINT_SCHEMA_VERSION,
+                "jax_version": None, "cases": {}}
+    with open(path) as f:
+        blob = json.load(f)
+    ver = blob.get("schema_version")
+    if ver != FINGERPRINT_SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: ir_fingerprints schema_version {ver!r} != supported "
+            f"{FINGERPRINT_SCHEMA_VERSION}; regenerate with "
+            f"`python scripts/analyze.py ir --write-fingerprints`")
+    return blob
+
+
+def merge_fingerprints(records: Dict[str, dict], jax_version: str,
+                       path: Optional[str] = None) -> str:
+    """Bless ``{case_id: case_record}`` into the committed file, keeping
+    cases from other legs (the mesh matrix) untouched."""
+    path = path or default_fingerprint_path()
+    blob = load_fingerprints(path)
+    blob["cases"].update(records)
+    out = {
+        "schema_version": FINGERPRINT_SCHEMA_VERSION,
+        "jax_version": jax_version,
+        "note": ("Per-config program fingerprints (IR005) and static "
+                 "jit-key counts (IR004).  Re-bless after an intended "
+                 "trace change with `python scripts/analyze.py ir "
+                 "--write-fingerprints` (see docs/STATIC_ANALYSIS.md)."),
+        "cases": {k: blob["cases"][k] for k in sorted(blob["cases"])},
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def structural_diff(old_prims: Dict[str, int],
+                    new_prims: Dict[str, int]) -> str:
+    """Readable primitive-histogram delta: ``+2 convert_element_type, -1
+    dot_general`` (empty string when histograms match — the change is
+    below the primitive level, e.g. shapes or params)."""
+    deltas = []
+    for prim in sorted(set(old_prims) | set(new_prims)):
+        d = new_prims.get(prim, 0) - old_prims.get(prim, 0)
+        if d:
+            deltas.append(f"{d:+d} {prim}")
+    return ", ".join(deltas)
+
+
+def _finding(check_id: str, severity: str, case_id: str, scope: str,
+             message: str) -> Finding:
+    return Finding(check_id=check_id, severity=severity,
+                   path=f"ir:{case_id}", line=0, scope=scope, message=message)
+
+
+def compare_case(case_id: str, record: dict, committed: dict,
+                 jax_matches: bool) -> List[Finding]:
+    """Diff one case's fresh record against the committed fingerprints.
+
+    IR004 (jit-key counts) always gates; IR005 (jaxpr hashes) gates only
+    when the running jax version matches the blessed one, else downgrades
+    to structural warnings (lowering differences across jax versions move
+    hashes without any repo change).
+    """
+    out: List[Finding] = []
+    base = committed.get("cases", {}).get(case_id)
+    if base is None:
+        out.append(_finding(
+            "IR005", SEV_ERROR, case_id, "-",
+            "config has no committed fingerprint — new matrix cell; bless "
+            "with `analyze.py ir --write-fingerprints`"))
+        return out
+
+    for entry in sorted(set(base["jit_keys"]) | set(record["jit_keys"])):
+        old = base["jit_keys"].get(entry)
+        new = record["jit_keys"].get(entry)
+        if old != new:
+            out.append(_finding(
+                "IR004", SEV_ERROR, case_id, entry,
+                f"static jit-key count changed: {old} -> {new} (bucket "
+                f"policy or static-arg signature moved; expected? re-bless "
+                f"with --write-fingerprints)"))
+
+    for entry in sorted(set(base["entries"]) | set(record["entries"])):
+        old = base["entries"].get(entry)
+        new = record["entries"].get(entry)
+        if old is None or new is None:
+            out.append(_finding(
+                "IR005", SEV_ERROR, case_id, entry,
+                f"entry {'appeared' if old is None else 'disappeared'} "
+                f"relative to the committed fingerprint"))
+            continue
+        if old["jaxpr_hash"] == new["jaxpr_hash"]:
+            continue
+        diff = structural_diff(old["prims"], new["prims"])
+        detail = (f"primitive delta: {diff}" if diff else
+                  "same primitive histogram — shape/param-level change")
+        if jax_matches:
+            out.append(_finding(
+                "IR005", SEV_ERROR, case_id, entry,
+                f"traced program changed ({detail}); if intended, re-bless "
+                f"with `analyze.py ir --write-fingerprints`"))
+        else:
+            out.append(_finding(
+                "IR005", SEV_WARNING, case_id, entry,
+                f"jaxpr hash differs under jax "
+                f"{'?' if not committed.get('jax_version') else committed['jax_version']}"
+                f"-blessed fingerprints ({detail}); hash gate inactive "
+                f"across jax versions"))
+    return out

@@ -1,0 +1,100 @@
+"""IR004 — static enumeration of the jit cache keys a serve config implies.
+
+``tests/test_recompile_count.py`` proves *dynamically* that observed
+compile counts stay within the engine's bucket sets — but only for the
+workloads the test happens to run.  This module derives the same bound
+*statically*: it replays the engine's documented bucketing policy
+(`serve.engine._bucket_len` and the width/plen resolution in
+``_run_wave``/``_admit_some``/``_run_chunk``) over the **entire feasible
+input domain** of a :class:`ServeConfig`, producing the exact set of
+distinct jit cache keys each entry point can ever be called with.
+
+The per-entry counts are pinned in ``tests/ir_fingerprints.json``; a
+bucketing change (new bucket floor, changed clamp, a static arg leaking
+into the key) shifts a count and fails IR004 with a diff naming the entry
+point — a recompile storm caught before a single trace runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.ir.matrix import SERVE_KW, IRCase
+from repro.serve.engine import _bucket_len
+
+
+def wave_keys(max_len: int, unroll: int) -> Dict[str, List[Tuple]]:
+    """Distinct jit keys of the wave engine's entry points.
+
+    Feasible domain: ``1 <= longest``, ``1 <= need``,
+    ``longest + need <= max_len`` (the ``_run_wave`` guard).  Batch rows
+    are always padded to ``max_batch``, so only (plen, width, unroll) vary.
+    """
+    prefill: set = set()
+    loop: set = set()
+    for need in range(1, max_len):
+        width = _bucket_len(need)
+        loop.add((width, min(unroll, width)))
+        for longest in range(1, max_len - need + 1):
+            plen = _bucket_len(longest, max_len - width)
+            if plen < longest:
+                plen = _bucket_len(longest, max_len - need)
+            if plen < longest:
+                plen = longest
+            prefill.add((plen,))
+    return {"prefill": sorted(prefill), "decode_loop": sorted(loop)}
+
+
+def continuous_keys(max_len: int, max_batch: int, chunk: int, unroll: int,
+                    capacity_tokens: Optional[int] = None
+                    ) -> Dict[str, List[Tuple]]:
+    """Distinct jit keys of the continuous engine's entry points.
+
+    Admission buckets the longest admitted prompt uncapped; a row's length
+    (prompt + generated so far) is bounded by the pool capacity, and the
+    chunk width buckets ``length + chunk``.  ``unroll`` is clamped to a
+    divisor of ``chunk`` exactly as ``_run_chunk`` does.
+    """
+    capacity = capacity_tokens or max_batch * max_len
+    admit = {(_bucket_len(p),) for p in range(1, capacity)}
+    u = min(unroll, chunk)
+    while chunk % u:
+        u -= 1
+    widths = {(_bucket_len(length + chunk), chunk, u)
+              for length in range(1, capacity + 1)}
+    return {"admit": sorted(admit), "decode_chunk": sorted(widths)}
+
+
+def resolve_static_unroll(case: IRCase, hardware: str) -> int:
+    """The unroll the engine would resolve for this case — same chain as
+    ``Engine._resolve_unroll`` (tuned ``decode_loop`` entry keyed by mesh
+    label, else the mesh heuristic), evaluated without building an engine."""
+    from repro.core.registry import GLOBAL_REGISTRY, OP_DECODE_LOOP
+    res = GLOBAL_REGISTRY.lookup_op(
+        OP_DECODE_LOOP, hardware, case.dtype,
+        (SERVE_KW["max_batch"], SERVE_KW["max_len"]),
+        mesh=None if case.mesh_name == "single" else case.mesh_name)
+    if res.source in ("exact", "nearest", "generic"):
+        return max(int(res.config.unroll), 1)
+    return 4 if case.mesh_spec else 1
+
+
+def enumerate_jit_keys(case: IRCase, unroll: int,
+                       max_batch: Optional[int] = None,
+                       max_len: Optional[int] = None,
+                       chunk: int = 8,
+                       capacity_tokens: Optional[int] = None
+                       ) -> Dict[str, int]:
+    """-> ``{entry: distinct-key count, "total": sum}`` for one case,
+    defaulting to the matrix's ``SERVE_KW`` serve shape."""
+    max_batch = max_batch or SERVE_KW["max_batch"]
+    max_len = max_len or SERVE_KW["max_len"]
+    if case.scheduler == "wave":
+        keys = wave_keys(max_len, unroll)
+        # train_step lowers for exactly one (state, batch) spec per case
+        keys["train_step"] = [("ir_train",)]
+    else:
+        keys = continuous_keys(max_len, max_batch, chunk, unroll,
+                               capacity_tokens)
+    counts = {entry: len(ks) for entry, ks in keys.items()}
+    counts["total"] = sum(counts.values())
+    return counts

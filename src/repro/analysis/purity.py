@@ -67,8 +67,10 @@ _STATIC_CALL_TAILS = {"dtype", "issubdtype", "result_type", "isdtype",
                       "isinstance", "len", "shape", "ndim"}
 
 
-def pragma_allows(mod: ModuleInfo, lineno: int, check_id: str) -> bool:
-    """True when line `lineno` (or the line above) waives `check_id`."""
+def pragma_line(mod: ModuleInfo, lineno: int, check_id: str):
+    """Line number of the pragma waiving `check_id` at `lineno` (the line
+    itself or the one above), or None — the pragma ledger needs to know
+    *which* pragma ate a finding, not just that one did."""
     for ln in (lineno, lineno - 1):
         if not (1 <= ln <= len(mod.lines)):
             continue
@@ -77,11 +79,16 @@ def pragma_allows(mod: ModuleInfo, lineno: int, check_id: str) -> bool:
             continue
         tokens = m.group(1)
         if tokens is None or not tokens.strip():
-            return True                       # bare allow: waive everything
+            return ln                         # bare allow: waive everything
         toks = {t.strip() for t in tokens.split(",")}
         if check_id in toks or SLUGS.get(check_id, "") in toks:
-            return True
-    return False
+            return ln
+    return None
+
+
+def pragma_allows(mod: ModuleInfo, lineno: int, check_id: str) -> bool:
+    """True when line `lineno` (or the line above) waives `check_id`."""
+    return pragma_line(mod, lineno, check_id) is not None
 
 
 def _is_numpy_alias(mod: ModuleInfo, base: str) -> bool:
@@ -101,17 +108,26 @@ def _in_try(node: ast.AST, fn_node: ast.AST) -> bool:
 
 
 class PurityChecker:
-    """Run the TP00x family over one CallGraph."""
+    """Run the TP00x family over one CallGraph.
 
-    def __init__(self, graph: CallGraph):
+    ``ledger`` (a :class:`repro.analysis.pragmas.PragmaLedger`, duck-typed
+    on ``.record``) is told about every finding a pragma suppresses, so
+    the PR900 unused-pragma check can tell live waivers from stale ones.
+    """
+
+    def __init__(self, graph: CallGraph, ledger=None):
         self.graph = graph
+        self.ledger = ledger
         self.findings: List[Finding] = []
 
     # -- emit ---------------------------------------------------------------
 
     def _flag(self, check_id: str, mod: ModuleInfo, node: ast.AST,
               scope: str, message: str):
-        if pragma_allows(mod, node.lineno, check_id):
+        waiver_ln = pragma_line(mod, node.lineno, check_id)
+        if waiver_ln is not None:
+            if self.ledger is not None:
+                self.ledger.record(mod.path, waiver_ln, check_id)
             return
         self.findings.append(Finding(
             check_id=check_id, severity=SEV_ERROR, path=mod.path,

@@ -56,8 +56,12 @@ class HardwareProfile:
     (:meth:`repro.core.tile_config.TileConfig.aligned`); ``vmem_bytes`` is
     the on-chip budget of the feasibility predicate (paper Eq. 5) — VMEM on
     TPU, SM shared memory on GPU, an L2/L3 proxy for the interpreted CPU
-    path.  ``gemm_block``/``flash_block`` seed the registry's default tier
-    (the paper's ``#define GPU_ELEM_NUM`` analogue) before any sweep ran.
+    path.  ``hbm_bytes`` is the per-chip main-memory *capacity* (HBM on
+    TPU/GPU, a host-RAM proxy on the interpreted CPU) that the IR memory
+    check (IR003, ``analyze.py ir``) budgets each compiled program's
+    live-buffer peak against.  ``gemm_block``/``flash_block`` seed the
+    registry's default tier (the paper's ``#define GPU_ELEM_NUM`` analogue)
+    before any sweep ran.
     """
     name: str
     # peak FLOP/s per chip, keyed by dtype name (paper Tab. 1/2 "theoretical peak")
@@ -65,6 +69,7 @@ class HardwareProfile:
     hbm_bandwidth: float          # bytes/s per chip
     vmem_bytes: int               # software-managed on-chip memory (the "cache")
     ici_link_bandwidth: float     # bytes/s per link (inter-chip)
+    hbm_bytes: int = 16 * 1024**3  # per-chip main-memory capacity
     mxu_dim: int = 128            # native minor-dim tile (MXU / tensor core)
     sublane: int = 8              # native second-minor tiling for f32
     platform: str = PLATFORM_TPU
@@ -104,6 +109,7 @@ TPU_V5E = HardwareProfile(
         "float32": 98.5e12,   # MXU f32 ~ half bf16 throughput
     },
     hbm_bandwidth=819e9,      # 819 GB/s
+    hbm_bytes=16 * 1024**3,   # 16 GiB HBM per chip
     vmem_bytes=128 * 1024 * 1024 // 8,  # ~16 MiB usable VMEM per core
     ici_link_bandwidth=50e9,  # ~50 GB/s per ICI link
     default_backend="pallas-tpu",
@@ -125,6 +131,7 @@ GPU_GENERIC = HardwareProfile(
         "float32": 19.5e12,   # CUDA-core f32
     },
     hbm_bandwidth=1555e9,     # HBM2e
+    hbm_bytes=40 * 1024**3,   # A100-40GB HBM2e stack
     vmem_bytes=192 * 1024,    # SM shared memory (the GEMM tile budget)
     ici_link_bandwidth=600e9 / 12,  # NVLink per-link
     mxu_dim=16,               # tensor-core fragment minor dim
@@ -147,6 +154,7 @@ CPU_INTERPRET = HardwareProfile(
     platform=PLATFORM_CPU_INTERPRET,
     peak_flops={"bfloat16": 1e11, "float32": 2e11},
     hbm_bandwidth=50e9,
+    hbm_bytes=8 * 1024**3,         # host-RAM slice the CI runner can commit
     vmem_bytes=32 * 1024 * 1024,   # L2+L3-ish proxy
     ici_link_bandwidth=10e9,
     mxu_dim=16,                    # SIMD width proxy — relaxes alignment

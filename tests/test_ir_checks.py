@@ -1,0 +1,480 @@
+"""IR checker tests: check semantics on synthetic summaries (fast, no
+tracing), static jit-key enumeration and its IR004 diff, fingerprint
+stability and re-bless mechanics, CLI exit codes, legacy tuned-DB loading
+under the IR artifact pass, and the seeded PR-6 regression (FSDP rules
+leaking into serving) being caught by IR001 — all without ever executing
+a program on a device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.findings import SEV_ERROR, SEV_WARNING
+from repro.analysis.ir import checks, fingerprints, recompile
+from repro.analysis.ir.matrix import (DTYPES, FAMILIES, SCHEDULERS, IRCase,
+                                      default_matrix, smoke_matrix)
+from repro.analysis.ir.trace import CaseResult, EntrySummary
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+WEIGHT = [64, 64]              # a weight leaf shape of the synthetic case
+ACTIVATION = [4, 16, 64]       # same numel (4096) but an activation shape
+
+
+def _summary(entry, **kw):
+    base = dict(
+        entry=entry, jaxpr_hash="h" * 8, prim_histogram={"dot_general": 2},
+        converts=[], dots=[], f64_avals=0,
+        memory={"argument_bytes": 1024, "output_bytes": 512,
+                "temp_bytes": 256, "peak_bytes": None},
+        while_collectives=[], collectives=[])
+    base.update(kw)
+    return EntrySummary(**base)
+
+
+def _case(entries, dtype="bfloat16", hardware="cpu-interpret", errors=None):
+    return CaseResult(
+        case_id=f"llama3.2-1b/wave/single/{dtype}",
+        entries=entries,
+        weight_shapes=[WEIGHT, [2] + WEIGHT, [128, 64]],
+        params_bytes=1 << 20, hardware=hardware, jax_version="x",
+        errors=errors or {})
+
+
+def _ids(findings):
+    return sorted({f.check_id for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# IR000-IR003 semantics on synthetic summaries
+# ---------------------------------------------------------------------------
+
+def test_ir000_trace_error_is_a_finding():
+    case = _case({}, errors={"prefill": "ValueError: boom"})
+    fs = checks.check_trace_errors(case)
+    assert _ids(fs) == ["IR000"] and fs[0].scope == "prefill"
+    assert "boom" in fs[0].message
+
+
+def test_ir001_flags_weight_shaped_gather_in_decode_loop():
+    rec = {"op": "all-gather", "numel": 4096, "bytes": 8192, "dims": WEIGHT}
+    case = _case({"decode_loop": _summary("decode_loop",
+                                          while_collectives=[rec, rec])})
+    fs = checks.check_collectives(case)
+    assert len(fs) == 1 and fs[0].check_id == "IR001"
+    assert fs[0].severity == SEV_ERROR and fs[0].scope == "decode_loop"
+    assert "2x" in fs[0].message and "fsdp=False" in fs[0].message
+
+
+def test_ir001_scan_sliced_weight_shape_also_flags():
+    rec = {"op": "all-reduce", "numel": 8192, "bytes": 16384,
+           "dims": [2, 64, 64]}
+    case = _case({"decode_chunk": _summary("decode_chunk",
+                                           while_collectives=[rec])})
+    assert _ids(checks.check_collectives(case)) == ["IR001"]
+
+
+def test_ir001_ignores_activation_collectives():
+    """The discriminator is the *shape*: an activation whose element count
+    collides with a weight's must not fire (the IR002 smoke false positive
+    that motivated shape matching)."""
+    rec = {"op": "all-reduce", "numel": 4096, "bytes": 8192,
+           "dims": ACTIVATION}
+    case = _case({"decode_loop": _summary("decode_loop",
+                                          while_collectives=[rec])})
+    assert checks.check_collectives(case) == []
+
+
+def test_ir001_only_decode_entries_gate():
+    """Prefill/train legitimately gather FSDP-sharded weights."""
+    rec = {"op": "all-gather", "numel": 4096, "bytes": 8192, "dims": WEIGHT}
+    case = _case({"prefill": _summary("prefill", while_collectives=[rec]),
+                  "train_step": _summary("train_step",
+                                         while_collectives=[rec])})
+    assert checks.check_collectives(case) == []
+
+
+def test_ir002_f64_anywhere_is_an_error():
+    case = _case({"prefill": _summary("prefill", f64_avals=3)})
+    fs = checks.check_numerics(case)
+    assert _ids(fs) == ["IR002"] and "float64" in fs[0].message
+
+
+def test_ir002_weight_upcast_only_in_bf16_serve_entries():
+    conv = {"src": "bfloat16", "dst": "float32", "numel": 4096,
+            "dims": WEIGHT}
+    act = {"src": "bfloat16", "dst": "float32", "numel": 4096,
+           "dims": ACTIVATION}
+    # bf16 case, serve entry, weight shape -> fires
+    case = _case({"prefill": _summary("prefill", converts=[conv])})
+    assert _ids(checks.check_numerics(case)) == ["IR002"]
+    # activation-shaped upcast (numel collision) -> clean
+    case = _case({"prefill": _summary("prefill", converts=[act])})
+    assert checks.check_numerics(case) == []
+    # train_step is exempt: f32 master params are the mixed-precision recipe
+    case = _case({"train_step": _summary("train_step", converts=[conv])})
+    assert checks.check_numerics(case) == []
+    # fp32 case has no bf16 contract to defend
+    case = _case({"prefill": _summary("prefill", converts=[conv])},
+                 dtype="float32")
+    assert checks.check_numerics(case) == []
+
+
+def test_ir002_dot_accumulate_allowlist():
+    ok = {"lhs": "bfloat16", "rhs": "bfloat16", "out": "float32"}
+    bad = {"lhs": "float32", "rhs": "float32", "out": "float16"}
+    case = _case({"prefill": _summary("prefill", dots=[ok])})
+    assert checks.check_numerics(case) == []
+    case = _case({"prefill": _summary("prefill", dots=[ok, bad])})
+    fs = checks.check_numerics(case)
+    assert _ids(fs) == ["IR002"] and "allowlist" in fs[0].message
+
+
+def test_ir003_budget_error_warning_and_fallback():
+    profile_budget = 8 * 1024**3          # cpu-interpret hbm_bytes
+    over = _summary("prefill",
+                    memory={"argument_bytes": None, "output_bytes": None,
+                            "temp_bytes": None,
+                            "peak_bytes": profile_budget + 1})
+    case = _case({"prefill": over})
+    fs = checks.check_memory(case)
+    assert _ids(fs) == ["IR003"] and fs[0].severity == SEV_ERROR
+    warn = _summary("prefill",
+                    memory={"argument_bytes": None, "output_bytes": None,
+                            "temp_bytes": None,
+                            "peak_bytes": int(profile_budget * 0.9)})
+    fs = checks.check_memory(_case({"prefill": warn}))
+    assert fs and fs[0].severity == SEV_WARNING
+    # no backend peak -> argument+output+temp sum
+    assert checks.peak_bytes(_summary("x")) == 1024 + 512 + 256
+
+
+def test_ir003_unknown_hardware_is_an_error():
+    case = _case({"prefill": _summary("prefill")}, hardware="martian-npu")
+    fs = checks.check_memory(case)
+    assert _ids(fs) == ["IR003"] and "unregistered" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# IR004 static jit-key enumeration
+# ---------------------------------------------------------------------------
+
+def test_wave_keys_match_engine_bucket_policy():
+    keys = recompile.wave_keys(max_len=64, unroll=1)
+    assert keys["prefill"] and keys["decode_loop"]
+    # every key is a bucket the engine could actually produce
+    from repro.serve.engine import _bucket_len
+    for (plen,) in keys["prefill"]:
+        assert plen >= 1
+    for (width, unroll) in keys["decode_loop"]:
+        assert width == _bucket_len(width) and unroll == 1
+
+
+def test_bucket_bump_changes_ir004_counts():
+    """A serve-shape/bucket change must move the static key count — the
+    signal IR004 pins in the fingerprint file."""
+    small = recompile.wave_keys(64, 1)
+    big = recompile.wave_keys(128, 1)
+    assert len(big["prefill"]) > len(small["prefill"])
+    c8 = recompile.continuous_keys(64, 4, chunk=8, unroll=1)
+    c16 = recompile.continuous_keys(64, 4, chunk=16, unroll=1)
+    assert c8["decode_chunk"] != c16["decode_chunk"]
+
+
+def test_continuous_unroll_clamped_to_chunk_divisor():
+    keys = recompile.continuous_keys(64, 4, chunk=8, unroll=3)
+    for (_w, chunk, u) in keys["decode_chunk"]:
+        assert chunk % u == 0
+
+
+def test_ir004_diff_names_the_entry_point():
+    record = {"jit_keys": {"prefill": 12, "decode_loop": 7, "total": 19},
+              "entries": {}}
+    committed = {"jax_version": "x",
+                 "cases": {"c": {"jit_keys": {"prefill": 10,
+                                              "decode_loop": 7, "total": 17},
+                                 "entries": {}}}}
+    fs = fingerprints.compare_case("c", record, committed, jax_matches=True)
+    assert _ids(fs) == ["IR004"]
+    assert sorted(f.scope for f in fs) == ["prefill", "total"]
+    assert "10 -> 12" in [f for f in fs if f.scope == "prefill"][0].message
+
+
+# ---------------------------------------------------------------------------
+# IR005 fingerprints
+# ---------------------------------------------------------------------------
+
+def _entry_rec(h, prims):
+    return {"jaxpr_hash": h, "prims": prims}
+
+
+def test_ir005_hash_drift_gates_only_on_matching_jax_version():
+    record = {"jit_keys": {}, "entries": {
+        "prefill": _entry_rec("new", {"dot_general": 4,
+                                      "convert_element_type": 2})}}
+    committed = {"jax_version": "0.4.37", "cases": {"c": {
+        "jit_keys": {}, "entries": {
+            "prefill": _entry_rec("old", {"dot_general": 5})}}}}
+    errs = fingerprints.compare_case("c", record, committed,
+                                     jax_matches=True)
+    assert [f.severity for f in errs] == [SEV_ERROR]
+    assert "+2 convert_element_type" in errs[0].message
+    assert "-1 dot_general" in errs[0].message
+    warns = fingerprints.compare_case("c", record, committed,
+                                      jax_matches=False)
+    assert [f.severity for f in warns] == [SEV_WARNING]
+
+
+def test_ir005_unfingerprinted_case_and_entry_churn():
+    fs = fingerprints.compare_case(
+        "new-case", {"jit_keys": {}, "entries": {}},
+        {"jax_version": "x", "cases": {}}, jax_matches=True)
+    assert _ids(fs) == ["IR005"] and "no committed fingerprint" in \
+        fs[0].message
+    record = {"jit_keys": {}, "entries": {"admit": _entry_rec("h", {})}}
+    committed = {"jax_version": "x", "cases": {"c": {
+        "jit_keys": {}, "entries": {"decode_chunk": _entry_rec("h", {})}}}}
+    fs = fingerprints.compare_case("c", record, committed, jax_matches=True)
+    assert sorted(f.scope for f in fs) == ["admit", "decode_chunk"]
+    assert all(f.check_id == "IR005" for f in fs)
+
+
+def test_fingerprint_file_schema_mismatch_names_rebless(tmp_path):
+    path = tmp_path / "fp.json"
+    path.write_text(json.dumps({"schema_version": 999, "cases": {}}))
+    with pytest.raises(ValueError, match="--write-fingerprints"):
+        fingerprints.load_fingerprints(str(path))
+
+
+def test_merge_keeps_other_legs(tmp_path):
+    path = str(tmp_path / "fp.json")
+    fingerprints.merge_fingerprints(
+        {"a/x": {"jit_keys": {"total": 1}, "entries": {}}}, "v", path)
+    fingerprints.merge_fingerprints(
+        {"b/y": {"jit_keys": {"total": 2}, "entries": {}}}, "v", path)
+    blob = fingerprints.load_fingerprints(path)
+    assert sorted(blob["cases"]) == ["a/x", "b/y"]
+
+
+def test_committed_fingerprints_cover_the_full_matrix():
+    """The acceptance matrix: 5 families x 2 schedulers x 2 meshes x 2
+    dtypes, every cell blessed in tests/ir_fingerprints.json."""
+    blob = fingerprints.load_fingerprints()
+    cases = default_matrix(mesh_specs=(None, "data=4,model=2"))
+    assert len(cases) == len(FAMILIES) * len(SCHEDULERS) * 2 * len(DTYPES)
+    for case in cases:
+        rec = blob["cases"].get(case.case_id)
+        assert rec is not None, f"unblessed matrix cell {case.case_id}"
+        assert set(rec["entries"]) == set(case.entries)
+        assert rec["jit_keys"]["total"] == sum(
+            v for k, v in rec["jit_keys"].items() if k != "total")
+
+
+# ---------------------------------------------------------------------------
+# fingerprint stability (real traces; summaries come off .ir_cache when warm)
+# ---------------------------------------------------------------------------
+
+def test_same_config_traces_to_identical_hashes():
+    from repro.analysis.ir.trace import trace_case
+    case = IRCase("llama3.2-1b", "continuous", None, "bfloat16")
+    a = trace_case(case)
+    b = trace_case(case)
+    assert not a.errors and not b.errors
+    assert {e: s.jaxpr_hash for e, s in a.entries.items()} == \
+        {e: s.jaxpr_hash for e, s in b.entries.items()}
+
+
+def test_fresh_trace_matches_committed_fingerprint():
+    """Cross-process determinism: the committed file was blessed in a
+    different process; a fresh in-process trace must reproduce its hashes
+    (only comparable on the jax version the file was blessed under)."""
+    import jax
+    blob = fingerprints.load_fingerprints()
+    if blob.get("jax_version") != jax.__version__:
+        pytest.skip("fingerprints blessed under a different jax version")
+    from repro.analysis.ir.trace import trace_case
+    case = IRCase("llama3.2-1b", "continuous", None, "bfloat16")
+    fresh = trace_case(case)
+    committed = blob["cases"][case.case_id]["entries"]
+    for entry, summary in fresh.entries.items():
+        assert summary.jaxpr_hash == committed[entry]["jaxpr_hash"], entry
+
+
+# ---------------------------------------------------------------------------
+# legacy tuned DBs under the IR artifact pass
+# ---------------------------------------------------------------------------
+
+def test_legacy_tuned_dbs_load_under_ir_unroll_resolution(tmp_path,
+                                                          monkeypatch):
+    """Every schema the repo ever committed (v1/v2 flat GEMM, v3 op-keyed,
+    v4 mesh-labeled) must still load into the registry the IR pass's
+    static unroll resolution consults."""
+    from repro.core import tuning_db as tdb
+    from repro.core.registry import OP_DECODE_LOOP, TileRegistry
+
+    flat = {"dtype": "bfloat16", "m": 256, "k": 256, "n": 256,
+            "bm": 128, "bk": 256, "bn": 256, "source": "model",
+            "seconds": 1e-5, "gflops": 1.0}
+    blobs = {
+        "v1.json": {"schema_version": 1, "hardware": "cpu-interpret",
+                    "entries": [flat]},
+        "v2.json": {"schema_version": 2, "hardware": "cpu-interpret",
+                    "entries": [dict(flat, m=512)]},
+        "v3.json": {"schema_version": 3, "hardware": "cpu-interpret",
+                    "entries": [{"op": "decode_loop", "dtype": "bfloat16",
+                                 "shape": [4, 64], "block": [2],
+                                 "source": "model"}]},
+    }
+    for name, blob in blobs.items():
+        (tmp_path / name).write_text(json.dumps(blob))
+        db = tdb.TuningDB.from_file(str(tmp_path / name))   # loads cleanly
+        assert len(db) == 1
+    # v4 (current): written through the API, mesh-labeled decode_loop entry
+    db = tdb.TuningDB("cpu-interpret")
+    db.add(tdb.TuningRecord(op=OP_DECODE_LOOP, dtype="bfloat16",
+                            shape=(4, 64), block=(2,)))
+    db.save(str(tmp_path / "cpu-interpret.json"))
+
+    reg = TileRegistry()
+    for name in list(blobs) + ["cpu-interpret.json"]:
+        tdb.load_into_registry(reg, str(tmp_path / name))
+    reg.mark_autoloaded()
+    monkeypatch.setattr("repro.core.registry.GLOBAL_REGISTRY", reg)
+
+    case = IRCase("llama3.2-1b", "continuous", None, "bfloat16")
+    unroll = recompile.resolve_static_unroll(case, "cpu-interpret")
+    assert unroll == 2                       # the tuned decode_loop entry
+    other = IRCase("llama3.2-1b", "wave", "data=4,model=2", "float32")
+    assert recompile.resolve_static_unroll(other, "cpu-interpret") >= 1
+
+
+# ---------------------------------------------------------------------------
+# pragma ledger + PR900
+# ---------------------------------------------------------------------------
+
+class _FakeMod:
+    def __init__(self, lines):
+        self.lines = lines
+
+
+class _FakeGraph:
+    def __init__(self, modules):
+        self.modules = modules
+
+
+def test_pragma_scan_ignores_docstring_mentions():
+    from repro.analysis import pragmas
+    mod = _FakeMod([
+        '"""docs show the syntax: # analysis: allow(TP001)"""',
+        "x = 1  # analysis: allow(TP001)",
+        "# analysis: allow",
+        "y = 2",
+    ])
+    sites = pragmas.scan_pragmas(_FakeGraph({"src/m.py": mod}))
+    assert [(s.line, s.check_ids) for s in sites] == \
+        [(2, ("TP001",)), (3, None)]
+    assert sites[1].label == "allow(*)"
+
+
+def test_pr900_fires_only_for_stale_pragmas():
+    from repro.analysis import pragmas
+    mod = _FakeMod(["a = 1  # analysis: allow(TP001)",
+                    "b = 2  # analysis: allow(host-transfer)"])
+    sites = pragmas.scan_pragmas(_FakeGraph({"src/m.py": mod}))
+    ledger = pragmas.PragmaLedger()
+    ledger.record("src/m.py", 1, "TP001")     # line 1 earns its keep
+    fs = pragmas.unused_pragma_findings(sites, ledger)
+    assert len(fs) == 1 and fs[0].check_id == "PR900"
+    assert fs[0].line == 2 and fs[0].severity == SEV_ERROR
+    # slugs normalize to check ids in the table
+    rows = pragmas.pragma_table(sites, ledger)
+    assert rows[1]["allows"] == ["TP001"] and rows[1]["live"] is False
+
+
+def test_repo_pragmas_are_all_live():
+    """Zero stale waivers on main — the PR900 gate's goal state."""
+    from repro.analysis import pragmas
+    from repro.analysis.callgraph import CallGraph
+    from repro.analysis.purity import PurityChecker
+    graph = CallGraph(REPO)
+    ledger = pragmas.PragmaLedger()
+    PurityChecker(graph, ledger=ledger).run()
+    sites = pragmas.scan_pragmas(graph)
+    assert sites, "expected at least one sanctioned pragma in src/repro"
+    stale = pragmas.unused_pragma_findings(sites, ledger)
+    assert stale == [], [f.render() for f in stale]
+    assert ledger.count() >= len(sites)
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (0 clean / 1 new findings / 2 usage error)
+# ---------------------------------------------------------------------------
+
+def test_cli_usage_error_exits_2():
+    from repro.analysis.cli import main
+    with pytest.raises(SystemExit) as exc:
+        main(["bogus-subcommand"])
+    assert exc.value.code == 2
+    with pytest.raises(SystemExit) as exc:
+        main([])
+    assert exc.value.code == 2
+
+
+def test_cli_pragmas_clean_exits_0():
+    from repro.analysis.cli import main
+    assert main(["pragmas"]) == 0
+
+
+def test_cli_ir_smoke_clean_and_unblessed_fails(tmp_path):
+    from repro.analysis.cli import main
+    out = str(tmp_path / "ir.json")
+    assert main(["ir", "--smoke", "--json", out]) == 0
+    blob = json.load(open(out))
+    assert {r["case"] for r in blob["ir_cases"]} == \
+        {c.case_id for c in smoke_matrix()}
+    assert blob["errors"] == 0
+    # an empty fingerprint file makes every smoke case unblessed -> exit 1
+    empty = tmp_path / "fp.json"
+    empty.write_text(json.dumps(
+        {"schema_version": fingerprints.FINGERPRINT_SCHEMA_VERSION,
+         "jax_version": None, "cases": {}}))
+    assert main(["ir", "--smoke", "--fingerprints", str(empty)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the seeded PR-6 regression, caught statically
+# ---------------------------------------------------------------------------
+
+def test_seeded_fsdp_regression_is_caught_by_ir001():
+    """Revert PR 6's inference-TP rule (ambient fsdp=True sharding rules,
+    so decode re-gathers weights every step) and the IR pass must fail
+    with IR001 — no device execution anywhere."""
+    code = """
+from repro.analysis.ir.matrix import IRCase
+from repro.analysis.ir.trace import trace_case
+from repro.analysis.ir import checks
+from repro.launch.mesh import build_mesh
+from repro.distributed import sharding as sh
+
+mesh = build_mesh("data=4,model=2")
+case = IRCase("llama3.2-1b", "wave", "data=4,model=2", "bfloat16")
+bad = trace_case(case, rules_override=sh.rules_for_mesh(mesh, fsdp=True))
+assert not bad.errors, bad.errors
+found = checks.check_case(bad)
+ids = sorted({f.check_id for f in found})
+assert "IR001" in ids, (ids, [f.message for f in found])
+scopes = {f.scope for f in found if f.check_id == "IR001"}
+assert "decode_loop" in scopes, scopes
+print("IR001-CAUGHT")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "IR001-CAUGHT" in proc.stdout
